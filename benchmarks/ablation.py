@@ -1,0 +1,51 @@
+"""Paper Fig. 10: ablation — USP → +TAS → +Torus → +one-sided.
+
+Model mapping of the ablation steps (DESIGN.md §2): TAS flips the
+boundary; Torus enables inter-machine overlap; the one-sided step removes
+the per-step rendezvous latency (modelled as the per-hop latency term,
+which ppermute/NVSHMEM avoid paying per transfer).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import plan, usp_plan
+from repro.core.comm_model import (
+    LayerWorkload,
+    NetworkModel,
+    attention_layer_latency,
+)
+
+from .common import row
+
+N, M_PER = 4, 8
+WORKLOADS = {
+    "flux_3072": LayerWorkload(batch=1, seq=36_864, heads=24, head_dim=128),
+    "cogvideox_20s": LayerWorkload(batch=1, seq=49_152, heads=24, head_dim=64),
+    "cogvideox_40s": LayerWorkload(batch=1, seq=98_304, heads=24, head_dim=64),
+}
+
+
+def run() -> list[str]:
+    rows = []
+    net = NetworkModel(inter_lat=5e-5)  # EFA-class per-rendezvous latency
+    for wname, wl in WORKLOADS.items():
+        steps = {
+            "usp": attention_layer_latency(
+                usp_plan(N, M_PER, wl.heads), wl, swift=False,
+                overlap_inter=False, net=net),
+            "tas": attention_layer_latency(
+                plan(N, M_PER, wl.heads), wl, swift=True,
+                overlap_inter=False, net=net),
+            "tas+torus": attention_layer_latency(
+                plan(N, M_PER, wl.heads), wl, swift=True,
+                overlap_inter=True, net=net),
+            "tas+torus+onesided": attention_layer_latency(
+                plan(N, M_PER, wl.heads), wl, swift=True,
+                overlap_inter=True, one_sided=True, net=net),
+        }
+        base = steps["usp"]["t_total"]
+        for name, r in steps.items():
+            rows.append(row(f"ablation/{wname}/{name}", r["t_total"] * 1e6,
+                            f"norm={r['t_total'] / base:.3f}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 3b / Appendix D: inter-machine communication volume per GPU,
+USP vs SwiftFusion, as machine count scales.
+
+Workloads: the paper's Flux (H=24, D=128) and CogVideoX (H=24, D=64)
+geometries.  Volumes in MiB (bf16), derived column = V_USP / V_SFU.
+"""
+from __future__ import annotations
+
+from repro.core import plan, usp_plan
+from repro.core.comm_model import LayerWorkload, swift_inter_volume, usp_inter_volume
+
+from .common import row
+
+WORKLOADS = {
+    "flux_3072": LayerWorkload(batch=1, seq=36_864, heads=24, head_dim=128),
+    "cogvideox_20s": LayerWorkload(batch=1, seq=49_152, heads=24, head_dim=64),
+}
+M_PER_MACHINE = 8  # paper testbed: 8 GPUs per machine
+
+
+def run() -> list[str]:
+    rows = []
+    for wname, wl in WORKLOADS.items():
+        for n in (2, 3, 4):
+            sp = plan(n, M_PER_MACHINE, wl.heads)
+            up = usp_plan(n, M_PER_MACHINE, wl.heads)
+            v_s = swift_inter_volume(sp, wl.blhd) * 2 / 2**20  # bf16 MiB
+            v_u = usp_inter_volume(up, wl.blhd) * 2 / 2**20
+            ratio = v_u / v_s if v_s else float("inf")
+            rows.append(row(f"comm_volume/{wname}/N{n}/usp_MiB", v_u,
+                            f"Pu={up.p_ulysses},Pr={up.p_ring}"))
+            rows.append(row(f"comm_volume/{wname}/N{n}/sfu_MiB", v_s,
+                            f"usp_over_sfu={ratio:.2f}x"))
+    return rows

@@ -1,0 +1,34 @@
+"""Shared helpers for the benchmark harness.
+
+Wall-clock on this CPU container is meaningless for multi-pod TPU latency,
+so each paper figure is regenerated from the calibrated analytical model
+(core/comm_model.py, validated against the paper's own reported ratios in
+tests/test_comm_model.py) plus *measured* single-device microbenchmarks
+where the quantity is device-local (kernel parity, merge overhead).
+Output contract: ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time of a jitted call, in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.2f},{derived}"

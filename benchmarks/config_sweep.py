@@ -1,0 +1,45 @@
+"""Paper Fig. 8: UxRy configuration sweep at fixed machine count.
+
+For N=4 and N=3 machines (×8 GPUs), sweep every valid (P_u, P_r)
+factorisation and report the latency-model estimate for USP vs TAS vs SFU
+at that configuration (UxRy = Ulysses degree x, Ring degree y).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.comm_model import LayerWorkload, attention_layer_latency
+from repro.core.planner import SPPlan
+
+from .common import row
+
+M_PER = 8
+WL = LayerWorkload(batch=1, seq=49_152, heads=24, head_dim=64)  # cogvideox
+
+
+def _valid_factorisations(n, m, heads):
+    total = n * m
+    out = []
+    for pu in range(1, total + 1):
+        if total % pu or heads % pu:
+            continue
+        out.append((pu, total // pu))
+    return out
+
+
+def run() -> list[str]:
+    rows = []
+    for n in (3, 4):
+        for pu, pr in _valid_factorisations(n, M_PER, WL.heads):
+            for method, swift, overlap in (("usp", False, False),
+                                           ("tas", True, False),
+                                           ("sfu", True, True)):
+                p = SPPlan(n_machines=n, m_per_machine=M_PER, p_ulysses=pu,
+                           p_ring=pr, ulysses_inter=swift)
+                r = attention_layer_latency(p, WL, swift=swift,
+                                            overlap_inter=overlap)
+                rows.append(row(
+                    f"config_sweep/N{n}/U{pu}R{pr}/{method}",
+                    r["t_total"] * 1e6,
+                    f"inter_MiB={r['inter_elems'] * 2 / 2**20:.1f}"))
+    return rows

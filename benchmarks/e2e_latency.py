@@ -1,0 +1,52 @@
+"""Paper Fig. 7: end-to-end one-sampling-step latency, USP vs TAS vs SFU at
+each method's optimal distributed configuration, M = 1..4 machines.
+
+Latency from the calibrated two-level network model; derived column shows
+speedup over USP (the paper reports TAS 1.27x, SFU 1.35x mean on >2
+machines — asserted directionally in tests/test_comm_model.py).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import plan, usp_plan
+from repro.core.comm_model import LayerWorkload, attention_layer_latency
+
+from .common import row
+
+M_PER = 8
+WORKLOADS = {
+    "flux_3072": ("flux-12b", 36_864, 1),
+    "flux_4096": ("flux-12b", 65_536, 1),
+    "cogvideox_20s": ("cogvideox-5b", 49_152, 1),
+    "cogvideox_40s": ("cogvideox-5b", 98_304, 1),
+}
+
+
+def _layer_latency(arch, seq, batch, n, method):
+    cfg = get_config(arch)
+    wl = LayerWorkload(batch=batch, seq=seq, heads=cfg.n_heads,
+                       head_dim=cfg.resolved_head_dim)
+    if method == "usp":
+        p = usp_plan(n, M_PER, cfg.n_heads)
+        r = attention_layer_latency(p, wl, swift=False, overlap_inter=False)
+    elif method == "tas":
+        p = plan(n, M_PER, cfg.n_heads)
+        r = attention_layer_latency(p, wl, swift=True, overlap_inter=False)
+    else:  # sfu = tas + torus overlap + one-sided
+        p = plan(n, M_PER, cfg.n_heads)
+        r = attention_layer_latency(p, wl, swift=True, overlap_inter=True)
+    return r["t_total"]
+
+
+def run() -> list[str]:
+    rows = []
+    for wname, (arch, seq, batch) in WORKLOADS.items():
+        cfg = get_config(arch)
+        for n in (1, 2, 3, 4):
+            base = _layer_latency(arch, seq, batch, n, "usp") * cfg.n_layers
+            for method in ("usp", "tas", "sfu"):
+                t = _layer_latency(arch, seq, batch, n, method) * cfg.n_layers
+                sp = base / t if t else 0.0
+                rows.append(row(f"e2e/{wname}/M{n}/{method}", t * 1e6,
+                                f"speedup_vs_usp={sp:.2f}x"))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper Fig. 9: single attention-layer latency sweeps over sequence length,
+head dimension, and batch size (SFU normalized to USP).
+
+Sweeps mirror the paper's §5.3 grid: D ∈ {32, 64, 128}, L ∈ {96k, 128k,
+160k, 192k}, B ∈ {1, 2, 4}; N=4 machines × 8 GPUs.
+"""
+from __future__ import annotations
+
+from repro.core import plan, usp_plan
+from repro.core.comm_model import LayerWorkload, attention_layer_latency
+
+from .common import row
+
+N, M_PER, HEADS = 4, 8, 24
+
+
+def _norm_latency(wl: LayerWorkload) -> tuple[float, float]:
+    usp = attention_layer_latency(usp_plan(N, M_PER, HEADS), wl, swift=False,
+                                  overlap_inter=False)["t_total"]
+    sfu = attention_layer_latency(plan(N, M_PER, HEADS), wl, swift=True,
+                                  overlap_inter=True)["t_total"]
+    return usp, sfu
+
+
+def run() -> list[str]:
+    rows = []
+    for d in (32, 64, 128):
+        for seq in (96_000, 128_000, 160_000, 192_000):
+            wl = LayerWorkload(batch=1, seq=seq, heads=HEADS, head_dim=d)
+            usp, sfu = _norm_latency(wl)
+            rows.append(row(f"layerwise/seq/D{d}/L{seq // 1000}k",
+                            sfu * 1e6, f"norm_vs_usp={sfu / usp:.3f}"))
+    for d in (32, 64, 128):
+        for b in (1, 2, 4):
+            wl = LayerWorkload(batch=b, seq=96_000, heads=HEADS, head_dim=d)
+            usp, sfu = _norm_latency(wl)
+            rows.append(row(f"layerwise/batch/D{d}/B{b}",
+                            sfu * 1e6, f"norm_vs_usp={sfu / usp:.3f}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Assignment §Roofline: per (arch × shape × mesh) three-term table,
+read from the dry-run artifacts in experiments/dryrun/.
+
+derived column: bottleneck term + useful-compute ratio.  Times are the
+roofline TERM values in microseconds (not wall measurements).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(f"{DRYRUN_DIR}/*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        r = d["roofline"]
+        tag = f"{d['arch']}/{d['shape']}/{d['mesh']}/{d['strategy']}"
+        dominant = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append(row(
+            f"roofline/{tag}", dominant * 1e6,
+            f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f};"
+            f"mem_GiB={d['memory']['total_bytes'] / 2**30:.2f}"))
+    if not rows:
+        rows.append(row("roofline/none", 0.0,
+                        "run repro.launch.dryrun first"))
+    return rows

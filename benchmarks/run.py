@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  See each module's docstring for
+the figure it regenerates and the derivation caveats (this container is
+CPU-only; multi-pod numbers come from the calibrated analytical model and
+the dry-run roofline, not wall clocks).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (
+        ablation,
+        comm_volume,
+        config_sweep,
+        e2e_latency,
+        kernel_bench,
+        layerwise,
+        roofline_table,
+    )
+
+    modules = {
+        "comm_volume (Fig 3b / App D)": comm_volume,
+        "e2e_latency (Fig 7)": e2e_latency,
+        "config_sweep (Fig 8)": config_sweep,
+        "layerwise (Fig 9)": layerwise,
+        "ablation (Fig 10)": ablation,
+        "kernel_bench (Fig 12)": kernel_bench,
+        "roofline_table (assignment)": roofline_table,
+    }
+    print("name,us_per_call,derived")
+    ok = True
+    for title, mod in modules.items():
+        print(f"# --- {title} ---", file=sys.stderr)
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception as e:  # keep the harness running, flag failure
+            print(f"{title},NaN,ERROR:{type(e).__name__}:{e}")
+            ok = False
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

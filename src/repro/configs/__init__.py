@@ -1,0 +1,51 @@
+"""Architecture configs: 10 assigned + the paper's 2 DiT workloads."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig, MoEConfig, SSMConfig
+from .shapes import DIT_SHAPES, SHAPES, InputShape
+
+_MODULES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "stablelm-3b": "stablelm_3b",
+    "whisper-tiny": "whisper_tiny",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "hymba-1.5b": "hymba_1_5b",
+    "arctic-480b": "arctic_480b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "chatglm3-6b": "chatglm3_6b",
+    "starcoder2-7b": "starcoder2_7b",
+    "flux-12b": "flux_12b",
+    "cogvideox-5b": "cogvideox_5b",
+}
+
+ASSIGNED_ARCHS = tuple(a for a in _MODULES if a not in ("flux-12b", "cogvideox-5b"))
+DIT_ARCHS = ("flux-12b", "cogvideox-5b")
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+    return mod.reduced()
+
+
+__all__ = [
+    "ALL_ARCHS",
+    "ASSIGNED_ARCHS",
+    "DIT_ARCHS",
+    "DIT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "SHAPES",
+    "SSMConfig",
+    "get_config",
+    "get_reduced",
+]

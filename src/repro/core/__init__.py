@@ -1,0 +1,39 @@
+"""SwiftFusion core: topology-aware sequence parallelism for attention.
+
+Public API:
+  sp_attention / SPConfig     — distributed attention entry point
+  decode_attention            — distributed decode over sharded KV cache
+  reference_attention         — single-device oracle
+  plan / SPPlan               — the paper's §4.2 topology planner
+  comm_model                  — Appendix-D analytical volumes
+"""
+from .decode import decode_attention
+from .planner import SPPlan, plan, usp_plan
+from .softmax import (
+    MaskSpec,
+    Partial,
+    attend_partial,
+    empty_partial,
+    finalize,
+    merge,
+    reference_attention,
+)
+from .strategy import STRATEGIES, SPConfig, resolve_layout, sp_attention
+
+__all__ = [
+    "MaskSpec",
+    "Partial",
+    "SPConfig",
+    "SPPlan",
+    "STRATEGIES",
+    "attend_partial",
+    "decode_attention",
+    "empty_partial",
+    "finalize",
+    "merge",
+    "plan",
+    "reference_attention",
+    "resolve_layout",
+    "sp_attention",
+    "usp_plan",
+]

@@ -1,0 +1,202 @@
+"""Collective toolkit for SwiftFusion's SP schedules on TPU meshes.
+
+The paper implements its communication with one-sided NVSHMEM put/get so
+that (a) no per-transfer sender/receiver rendezvous happens and (b) no SM
+cycles are burnt on communication kernels.  The TPU-idiomatic equivalent is
+``lax.ppermute``: XLA lowers it to ``collective-permute-start/done`` pairs
+executed by the ICI DMA engines (no core cycles) and its latency-hiding
+scheduler hoists the ``start`` above independent compute — precisely the
+overlap NVSHMEM gives the paper.  Every schedule here is therefore built
+from ppermute over a *flattened* SP axis, with the paper's logical
+(P_u × P_r) factorisation expressed as plain rank arithmetic.
+
+Logical layout (see planner.py):
+  flat rank p in [0, P_u * P_r) over the mesh SP axes (major axis first).
+  SwiftFusion (ulysses_outer=True):  u = p // P_r,  r = p %  P_r
+      → Ulysses groups span the slow outer (pod) boundary, Ring groups are
+        contiguous inside a pod.
+  USP       (ulysses_outer=False):   u = p %  P_u,  r = p // P_u
+      → Ring groups span pods, Ulysses groups stay inside a pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+AxisNames = tuple[str, ...]
+
+
+def flat_axis_size(mesh: jax.sharding.Mesh | None, axes: AxisNames) -> int:
+    if mesh is None:  # inside shard_map: use psum-of-ones trick? callers pass mesh
+        raise ValueError("mesh required")
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def flat_rank(axes: AxisNames) -> jax.Array:
+    """Flattened rank over (possibly multiple) named mesh axes, major-first."""
+    return lax.axis_index(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    """(P_u × P_r) logical factorisation of a flattened SP axis."""
+
+    axes: AxisNames
+    p_ulysses: int
+    p_ring: int
+    ulysses_outer: bool  # True = SwiftFusion/TAS; False = USP
+
+    @property
+    def size(self) -> int:
+        return self.p_ulysses * self.p_ring
+
+    # -- static (python int) coordinates, used to build perm tables --------
+    def coords(self, p: int) -> tuple[int, int]:
+        if self.ulysses_outer:
+            return p // self.p_ring, p % self.p_ring
+        return p % self.p_ulysses, p // self.p_ulysses
+
+    def rank(self, u: int, r: int) -> int:
+        if self.ulysses_outer:
+            return u * self.p_ring + r
+        return r * self.p_ulysses + u
+
+    # -- traced coordinates, used inside shard_map bodies -------------------
+    def my_coords(self) -> tuple[jax.Array, jax.Array]:
+        p = flat_rank(self.axes)
+        if self.ulysses_outer:
+            return p // self.p_ring, p % self.p_ring
+        return p % self.p_ulysses, p // self.p_ulysses
+
+    # -- permutation tables --------------------------------------------------
+    def ring_perm(self, shift: int = 1) -> list[tuple[int, int]]:
+        """Rotate by ``shift`` inside each Ring group (same u)."""
+        out = []
+        for u in range(self.p_ulysses):
+            for r in range(self.p_ring):
+                out.append((self.rank(u, r), self.rank(u, (r + shift) % self.p_ring)))
+        return out
+
+    def ulysses_stage_perm(self, k: int) -> list[tuple[int, int]]:
+        """Stage ``k`` of the decomposed all-to-all: u sends to (u + k) % P_u
+        inside each Ulysses group (same r).  §4.3 'Breakdown of All-to-All'."""
+        out = []
+        for u in range(self.p_ulysses):
+            for r in range(self.p_ring):
+                out.append(
+                    (self.rank(u, r), self.rank((u + k) % self.p_ulysses, r))
+                )
+        return out
+
+    def seq_offset_of_rank(self, shard_len: int) -> jax.Array:
+        """Global sequence offset of *this* device's original shard."""
+        return flat_rank(self.axes) * shard_len
+
+    def ulysses_group_offsets(self, shard_len: int) -> jax.Array:
+        """Global seq offsets of the shards gathered from my Ulysses group,
+        ordered by source ulysses-coordinate u' = 0..P_u-1.  Traced."""
+        _, r = self.my_coords()
+        us = jnp.arange(self.p_ulysses)
+        if self.ulysses_outer:
+            ranks = us * self.p_ring + r
+        else:
+            ranks = r * self.p_ulysses + us
+        return ranks * shard_len
+
+
+def ppermute(x, axes: AxisNames, perm: Sequence[tuple[int, int]]):
+    return lax.ppermute(x, axes, perm=list(perm))
+
+
+# ---------------------------------------------------------------------------
+# Grouped all-to-all via staged ppermute (the paper's one-sided decomposition)
+# ---------------------------------------------------------------------------
+
+def grouped_all_to_all(
+    x: jax.Array,
+    layout: GroupLayout,
+    *,
+    split_axis: int,
+    stack_axis: int = 0,
+) -> jax.Array:
+    """All-to-all restricted to Ulysses groups of ``layout``.
+
+    Splits ``x`` into P_u equal chunks along ``split_axis``; chunk j is
+    delivered to ulysses-peer j.  Returns the received chunks stacked on a
+    new leading axis ordered by *source* ulysses coordinate:
+    ``out[j] = chunk (destined for me) from peer with u = j``.
+
+    Implemented as P_u - 1 ppermute stages.  The diagonal chunk (j == my u)
+    is **stationary** — the paper's §4.3 observation — and never moves.
+    """
+    p_u = layout.p_ulysses
+    chunks = jnp.stack(jnp.split(x, p_u, axis=split_axis), axis=0)  # [P_u, ...]
+    if p_u == 1:
+        return chunks
+    u, _ = layout.my_coords()
+    out = jnp.zeros_like(chunks)
+    # stationary diagonal chunk: x's chunk index u stays at out index u
+    mine = jnp.take(chunks, u, axis=0)
+    out = _dyn_set(out, u, mine)
+    for k in range(1, p_u):
+        # I send my chunk destined for peer (u + k); I receive from (u - k).
+        send = jnp.take(chunks, (u + k) % p_u, axis=0)
+        recv = ppermute(send, layout.axes, layout.ulysses_stage_perm(k))
+        out = _dyn_set(out, (u - k) % p_u, recv)
+    return out
+
+
+def _dyn_set(buf: jax.Array, idx, val: jax.Array) -> jax.Array:
+    return lax.dynamic_update_slice_in_dim(buf, val[None], idx, axis=0)
+
+
+def monolithic_all_to_all(
+    x: jax.Array, layout: GroupLayout, *, split_axis: int
+) -> jax.Array:
+    """Baseline atomic all-to-all (what Ulysses does before Torus).
+
+    Same contract as :func:`grouped_all_to_all`.  Uses ``lax.all_to_all``
+    when the ulysses group covers the whole flattened SP axis; otherwise
+    falls back to the staged implementation (XLA's all_to_all has no
+    subgroup support over a partial logical factor of a named axis).
+    """
+    if layout.p_ring == 1 and layout.p_ulysses == layout.size:
+        chunks = jnp.stack(jnp.split(x, layout.p_ulysses, axis=split_axis), axis=0)
+        # tiled all-to-all over the leading [P_u] axis: slice j -> peer j,
+        # received slices re-stacked in source order — one atomic XLA op.
+        return lax.all_to_all(
+            chunks, layout.axes, split_axis=0, concat_axis=0, tiled=True
+        )
+    return grouped_all_to_all(x, layout, split_axis=split_axis)
+
+
+def ungroup_all_to_all(
+    stacked: jax.Array, layout: GroupLayout, *, concat_axis: int
+) -> jax.Array:
+    """Inverse transform: send ``stacked[j]`` back to ulysses-peer j and
+    concatenate the received chunks along ``concat_axis`` (the fourth
+    all-to-all of Ulysses attention, applied to O)."""
+    p_u = layout.p_ulysses
+    if p_u == 1:
+        return jnp.squeeze(stacked, axis=0)
+    if layout.p_ring == 1 and layout.p_ulysses == layout.size:
+        moved = lax.all_to_all(
+            stacked, layout.axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        return jnp.concatenate(list(moved), axis=concat_axis)
+    u, _ = layout.my_coords()
+    out = jnp.zeros_like(stacked)
+    out = _dyn_set(out, u, jnp.take(stacked, u, axis=0))
+    for k in range(1, p_u):
+        send = jnp.take(stacked, (u + k) % p_u, axis=0)
+        recv = ppermute(send, layout.axes, layout.ulysses_stage_perm(k))
+        out = _dyn_set(out, (u - k) % p_u, recv)
+    # out[j] now holds the chunk produced on peer j for me; order by j.
+    return jnp.concatenate(list(out), axis=concat_axis)

@@ -1,0 +1,142 @@
+"""Analytical communication-volume and latency model (paper Appendix D).
+
+Reproduces the paper's inter-machine communication volume formulas for USP
+and SwiftFusion, plus a simple two-level (intra/inter) alpha-beta latency
+model used by the benchmark harness to regenerate the shape of the paper's
+Figures 7/8/10 without multi-machine hardware.
+
+All volumes are **elements per GPU** (multiply by bytes/elem for bytes), in
+terms of B (batch), L (global sequence), H (heads), D (head dim), N
+(machines), M (devices per machine), P_u, P_r (Ulysses/Ring degrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .planner import SPPlan
+
+
+def usp_inter_volume(plan: SPPlan, blhd: float) -> float:
+    """Appendix D eq. (4)-(5): USP inter-machine elements per GPU."""
+    n, p_r, p_u = plan.n_machines, plan.p_ring, plan.p_ulysses
+    if n == 1:
+        return 0.0
+    if p_r >= n:
+        # Ring spans machines; each of the N-1 inter-machine hops moves KV.
+        return 2.0 * (n - 1) * blhd / n
+    # Ring smaller than machine count: Ulysses also crosses machines with
+    # degree N / P_r.
+    g = n / p_r
+    return (2.0 * (p_r - 1) * (n / p_r) + 4.0 * (g - 1) / g) * blhd / n
+
+
+def swift_inter_volume(plan: SPPlan, blhd: float) -> float:
+    """Appendix D eq. (6)-(7): SwiftFusion inter-machine elements per GPU."""
+    n, p_u = plan.n_machines, plan.p_ulysses
+    if n == 1:
+        return 0.0
+    if p_u >= n:
+        return 4.0 * (n - 1) / n * blhd / n
+    # Ulysses smaller than machine count: Ring also crosses machines with
+    # degree N / P_u.
+    g = n / p_u
+    return (2.0 * (g - 1) + 4.0 * (p_u - 1) / p_u * g) * blhd / n
+
+
+def intra_volume(plan: SPPlan, blhd: float, *, swift: bool) -> float:
+    """Intra-machine elements per GPU (not in the paper's appendix; derived
+    the same way).  Swift runs Ring intra-machine (volume 2·(Pr-1)/Pr·BLHD
+    restricted to the machine's L/N slice per step ... aggregated), USP runs
+    Ulysses intra-machine."""
+    n, m = plan.n_machines, plan.m_per_machine
+    p_u, p_r = plan.p_ulysses, plan.p_ring
+    if m == 1:
+        return 0.0
+    if swift:
+        r_intra = min(p_r, m)
+        return 2.0 * (r_intra - 1) * blhd / n / max(r_intra, 1) * r_intra
+    u_intra = min(p_u, m)
+    return 4.0 * (u_intra - 1) / u_intra * blhd / n
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Two-level network + compute model for latency estimates.
+
+    Defaults approximate the paper's testbed-equivalent on TPU terms:
+    intra = ICI, inter = DCN/inter-pod.
+    """
+
+    intra_bw: float = 4.9e11  # B/s aggregated intra-machine per device
+    inter_bw: float = 5.0e10  # B/s inter-machine per device
+    intra_lat: float = 1e-6  # s per hop
+    inter_lat: float = 1e-5  # s per hop
+    flops: float = 197e12  # peak bf16 FLOP/s per device
+    mfu: float = 0.5  # assumed attention kernel efficiency
+    bytes_per_elem: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerWorkload:
+    batch: int
+    seq: int  # global sequence length
+    heads: int
+    head_dim: int
+
+    @property
+    def blhd(self) -> float:
+        return float(self.batch * self.seq * self.heads * self.head_dim)
+
+    def attention_flops(self) -> float:
+        # 2 matmuls (QK^T and PV), 2*L*L*D each per head, bidirectional DiT.
+        return 4.0 * self.batch * self.heads * self.seq * self.seq * self.head_dim
+
+
+def attention_layer_latency(
+    plan: SPPlan,
+    wl: LayerWorkload,
+    net: NetworkModel = NetworkModel(),
+    *,
+    swift: bool,
+    overlap_inter: bool = False,
+    overlap_intra: bool = True,
+    one_sided: bool = False,
+) -> dict[str, float]:
+    """Estimate one distributed attention layer's latency components.
+
+    ``overlap_inter`` models Torus Attention: the inter-machine all-to-all
+    is hidden behind compute up to the compute time.  Ring's intra-machine
+    transfers are overlappable by construction (``overlap_intra``).
+
+    ``one_sided`` models §4.4: two-sided libraries pay a sender/receiver
+    rendezvous *per transfer step* (P_r - 1 ring steps + the a2a stages,
+    Fig. 4); the one-sided design pays exactly two barriers per layer
+    (Algorithm 1 lines 16/36), independent of step count.
+    """
+    inter_v = (swift_inter_volume if swift else usp_inter_volume)(plan, wl.blhd)
+    intra_v = intra_volume(plan, wl.blhd, swift=swift)
+    b = net.bytes_per_elem
+    t_inter = inter_v * b / net.inter_bw + (plan.n_machines > 1) * net.inter_lat
+    t_intra = intra_v * b / net.intra_bw + (plan.m_per_machine > 1) * net.intra_lat
+    t_comp = wl.attention_flops() / plan.sp_degree / (net.flops * net.mfu)
+    ring_steps = max(plan.p_ring - 1, 0)
+    a2a_stages = max(plan.p_ulysses - 1, 0)
+    if one_sided:
+        t_sync = 2 * (net.inter_lat if plan.n_machines > 1 else net.intra_lat)
+    else:
+        inter_steps = a2a_stages if plan.ulysses_inter else ring_steps
+        intra_steps = ring_steps if plan.ulysses_inter else a2a_stages
+        t_sync = (inter_steps * net.inter_lat * (plan.n_machines > 1)
+                  + intra_steps * net.intra_lat * (plan.m_per_machine > 1))
+    exposed_intra = 0.0 if overlap_intra else t_intra
+    exposed_inter = max(0.0, t_inter - t_comp) if overlap_inter else t_inter
+    total = t_comp + exposed_inter + exposed_intra + t_sync
+    return {
+        "t_compute": t_comp,
+        "t_inter": t_inter,
+        "t_intra": t_intra,
+        "t_sync": t_sync,
+        "t_total": total,
+        "inter_elems": inter_v,
+        "intra_elems": intra_v,
+    }

@@ -1,0 +1,89 @@
+"""Topology-aware SP planner (paper §4.2).
+
+Given a cluster of N machines × M devices (TPU: N pods × M intra-pod chips
+in the SP group) and an attention layer with H heads, SwiftFusion organises
+the N·M devices into a 2-D logical mesh P_u × P_r with
+
+    P_u = gcd(N·M, H)          (maximise Ulysses usage)
+    P_r = N·M / P_u
+
+and assigns the *Ulysses* group to span the slow (inter-machine) boundary
+and the *Ring* group to stay inside the fast (intra-machine) network —
+the inverse of USP's assignment.
+
+For GQA models the Ulysses head-scatter must divide the number of *KV*
+heads (otherwise KV heads would have to be replicated); the planner
+therefore takes ``heads = gcd(H_q, H_kv)`` unless ``replicate_kv`` is set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SPPlan:
+    """A concrete SP decomposition of ``n_machines * m_per_machine`` devices."""
+
+    n_machines: int  # N: pods (slow boundary)
+    m_per_machine: int  # M: chips per pod in the SP group (fast network)
+    p_ulysses: int  # P_u
+    p_ring: int  # P_r
+    ulysses_inter: bool  # True = SwiftFusion/TAS, False = USP baseline
+
+    @property
+    def sp_degree(self) -> int:
+        return self.n_machines * self.m_per_machine
+
+    @property
+    def torus_degree(self) -> int:
+        """N for Torus Attention (inter-machine Ulysses stages), §4.3.
+
+        Torus applies when Ulysses spans machines; its stage count is the
+        number of machines covered by the Ulysses group.
+        """
+        if not self.ulysses_inter:
+            return 1
+        return min(self.p_ulysses, self.n_machines)
+
+    def validate(self) -> None:
+        assert self.p_ulysses * self.p_ring == self.sp_degree, self
+        assert self.p_ulysses >= 1 and self.p_ring >= 1, self
+
+
+def plan(
+    n_machines: int,
+    m_per_machine: int,
+    num_q_heads: int,
+    num_kv_heads: int | None = None,
+    *,
+    swift: bool = True,
+    replicate_kv: bool = False,
+) -> SPPlan:
+    """Compute (P_u, P_r) per §4.2: P_u = gcd(N*M, H), P_r = N*M / P_u."""
+    sp = n_machines * m_per_machine
+    if num_kv_heads is None:
+        num_kv_heads = num_q_heads
+    heads = num_q_heads if replicate_kv else math.gcd(num_q_heads, num_kv_heads)
+    p_u = math.gcd(sp, heads)
+    p = SPPlan(
+        n_machines=n_machines,
+        m_per_machine=m_per_machine,
+        p_ulysses=p_u,
+        p_ring=sp // p_u,
+        ulysses_inter=swift,
+    )
+    p.validate()
+    return p
+
+
+def usp_plan(
+    n_machines: int,
+    m_per_machine: int,
+    num_q_heads: int,
+    num_kv_heads: int | None = None,
+) -> SPPlan:
+    """The USP baseline: same (P_u, P_r) factorisation but Ring spans the
+    inter-machine boundary and Ulysses stays intra-machine (§2.2)."""
+    p = plan(n_machines, m_per_machine, num_q_heads, num_kv_heads, swift=False)
+    return p

@@ -1,0 +1,111 @@
+"""Ring Attention over a logical ring group (paper §2.2, Algorithm 1 RINGATTN).
+
+Per-device view: the KV shard (possibly a Ulysses-gathered concatenation of
+several chunks) rotates around the Ring group in P_r steps while each device
+keeps its local Q and accumulates the online-softmax partial ``(O', l, m)``.
+
+The KV transfer for step s+1 is issued *before* the attention compute of
+step s (double buffering), so XLA's latency-hiding scheduler can overlap
+``collective-permute-start`` with the matmuls — the TPU equivalent of the
+paper's stream-ordered one-sided pulls (Algorithm 1 RINGATTN lines 2-7:
+pull next, compute current, wait).
+
+Masking is exact under arbitrary chunk layouts: the caller supplies a
+*position function* mapping the ring rank that owns the currently-held KV
+to the global positions of its elements, so causal/sliding-window masks are
+identical to the single-device computation no matter where a chunk
+currently sits.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .collectives import GroupLayout, ppermute
+from .softmax import (MaskSpec, Partial, attend_partial,
+                      attend_partial_blockwise, empty_partial, merge)
+
+# maps the ring coordinate (traced int32) owning the chunk -> [Lk] positions
+KPosFn = Callable[[jax.Array], jax.Array]
+
+
+def ring_attention(
+    q: jax.Array,  # [B, Lq, Hq, D] local query (stays put)
+    k: jax.Array,  # [B, Lk, Hkv, D] local KV shard (rotates)
+    v: jax.Array,
+    layout: GroupLayout,
+    *,
+    q_pos: jax.Array | None,  # [Lq] global positions of q (None = no masking)
+    k_pos_fn: KPosFn | None,
+    scale: float | None = None,
+    causal: bool = False,
+    window: int | None = None,
+    accum: Partial | None = None,
+    unroll: bool = False,
+    kv_block: int | None = None,
+) -> Partial:
+    """Run P_r ring steps; returns the merged partial (not finalized).
+
+    ``kv_block`` caps the materialized score matrix per attend (see
+    softmax.attend_partial_blockwise)."""
+    def _attend(q_, k_, v_, mask):
+        if kv_block is not None:
+            return attend_partial_blockwise(q_, k_, v_, scale=scale,
+                                            mask=mask, kv_block=kv_block)
+        return attend_partial(q_, k_, v_, scale=scale, mask=mask)
+    p_r = layout.p_ring
+    b, lq, hq, d = q.shape
+    acc = accum if accum is not None else empty_partial(b, lq, hq, d)
+    masked = causal or window is not None
+
+    def mask_for(owner_r):
+        if not masked:
+            return None
+        return MaskSpec(
+            causal=causal,
+            window=window,
+            q_pos=q_pos,
+            k_pos=k_pos_fn(owner_r) if k_pos_fn is not None else None,
+        )
+
+    _, my_r = layout.my_coords()
+    if p_r == 1:
+        return merge(acc, _attend(q, k, v, mask_for(my_r)))
+
+    perm = layout.ring_perm(1)
+
+    def body(s, carry):
+        kc, vc, acc = carry
+        # issue next-step transfer first (double buffer), compute current
+        kn = ppermute(kc, layout.axes, perm)
+        vn = ppermute(vc, layout.axes, perm)
+        owner = (my_r - s) % p_r  # ring rank whose shard I currently hold
+        acc = merge(acc, _attend(q, kc, vc, mask_for(owner)))
+        return kn, vn, acc
+
+    if unroll:
+        # unrolling lets XLA schedule permutes across step boundaries at the
+        # cost of HLO size; fori_loop keeps HLO O(1) in P_r.  The barrier on
+        # acc stops the scheduler from materializing every step's score
+        # matrix at once (permutes don't depend on acc, so they still
+        # overlap with compute).
+        kc, vc = k, v
+        for s in range(p_r - 1):
+            # gate this step's attend inputs on the accumulator so only one
+            # step's score matrix is live; the next permute stays independent
+            kn = ppermute(kc, layout.axes, perm)
+            vn = ppermute(vc, layout.axes, perm)
+            gated = lax.optimization_barrier((kc, vc) + tuple(acc))
+            kc_g, vc_g = gated[0], gated[1]
+            acc = Partial(*gated[2:])
+            owner = (my_r - s) % p_r
+            acc = merge(acc, _attend(q, kc_g, vc_g, mask_for(owner)))
+            kc, vc = kn, vn
+    else:
+        kc, vc, acc = lax.fori_loop(0, p_r - 1, body, (k, v, acc))
+    # last step: compute only, no further transfer (2(P-1)/P volume, §2.2)
+    owner = (my_r - (p_r - 1)) % p_r
+    return merge(acc, _attend(q, kc, vc, mask_for(owner)))

@@ -1,0 +1,151 @@
+"""SP strategy dispatch: full | ring | ulysses | usp | swift | swift_torus.
+
+This is the public entry point models call for distributed attention.  It
+owns the ``shard_map`` over the SP mesh axes; everything outside attention
+remains plain GSPMD.
+
+Strategies (P = SP degree, N = machines/pods, M = chips per pod):
+  full        — no SP; single-device reference (debug / tiny meshes).
+  ring        — Ring Attention over the whole SP group (P_u = 1).
+  ulysses     — Ulysses Attention over the whole SP group (P_r = 1,
+                monolithic all-to-all).  Requires P | gcd(Hq, Hkv).
+  usp         — USP baseline [5]: Ulysses intra-machine, Ring inter.
+  swift       — SwiftFusion TAS (§4.2): Ulysses *inter*-machine, Ring
+                *intra*; monolithic all-to-alls (the paper's "TAS" ablation).
+  swift_torus — TAS + Torus Attention (§4.3): chunked all-to-all overlapped
+                with compute, one-sided-style ppermute stages (full SFU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import planner
+from .collectives import GroupLayout
+from .ring import ring_attention
+from .softmax import finalize, reference_attention, MaskSpec
+from .torus import torus_attention
+from .ulysses import gather_qkv, group_positions, scatter_o
+
+STRATEGIES = ("full", "ring", "ulysses", "usp", "swift", "swift_torus")
+
+
+@dataclasses.dataclass(frozen=True)
+class SPConfig:
+    """How attention is distributed on the mesh."""
+
+    strategy: str = "swift_torus"
+    sp_axes: tuple[str, ...] = ("model",)  # sequence-parallel mesh axes
+    batch_axes: tuple[str, ...] | None = ("data",)  # batch (DP) mesh axes
+    machine_axis: str = "pod"  # the slow-boundary axis (paper's N)
+    replicate_kv: bool = False  # allow P_u up to gcd(SP, Hq) by replicating KV
+    # Unrolled ring steps let XLA schedule each permute against the next
+    # step's compute AND make HLO cost_analysis see every trip (lax loops
+    # are counted once); fori_loop is available for very large P_r.
+    unroll_ring: bool = True
+    # Beyond-paper (§Perf): fuse all Pull-Q stage compute into one ring
+    # circulation of the diagonal KV (Algorithm 1 re-circulates it P_u x).
+    torus_fused_pull_q: bool = False
+    # Beyond-paper (§Perf): cap the materialized score matrix per attend at
+    # [B, H, Lq, attn_kv_block] (XLA-level flash blocking); None = off.
+    attn_kv_block: int | None = None
+
+    def __post_init__(self):
+        assert self.strategy in STRATEGIES, self.strategy
+
+
+def resolve_layout(
+    cfg: SPConfig, mesh: jax.sharding.Mesh, num_q_heads: int, num_kv_heads: int
+) -> GroupLayout:
+    """Instantiate the paper's (P_u × P_r) plan for this mesh + head count."""
+    sp = math.prod(mesh.shape[a] for a in cfg.sp_axes)
+    n = mesh.shape[cfg.machine_axis] if cfg.machine_axis in cfg.sp_axes else 1
+    m = sp // n
+    if cfg.strategy == "ring":
+        return GroupLayout(cfg.sp_axes, 1, sp, ulysses_outer=True)
+    if cfg.strategy == "ulysses":
+        heads = num_q_heads if cfg.replicate_kv else math.gcd(num_q_heads, num_kv_heads)
+        if heads % sp != 0:
+            raise ValueError(
+                f"ulysses needs SP ({sp}) | heads ({heads}); use usp/swift instead"
+            )
+        return GroupLayout(cfg.sp_axes, sp, 1, ulysses_outer=True)
+    swift = cfg.strategy in ("swift", "swift_torus")
+    pl = planner.plan(
+        n, m, num_q_heads, num_kv_heads, swift=swift, replicate_kv=cfg.replicate_kv
+    )
+    return GroupLayout(cfg.sp_axes, pl.p_ulysses, pl.p_ring, ulysses_outer=swift)
+
+
+def _usp_like(q, k, v, layout: GroupLayout, *, scale, causal, window, unroll,
+              kv_block=None):
+    """Shared body for usp/swift/ulysses/ring: monolithic Ulysses gather →
+    Ring Attention → scatter.  The layout decides which boundary each
+    technique crosses (that single bit is the paper's §4.2 contribution)."""
+    ls = q.shape[1]
+    g = gather_qkv(q, k, v, layout)
+    kpos_fn = lambda owner_r: group_positions(layout, ls, owner_r)
+    part = ring_attention(
+        g.q, g.k, g.v, layout,
+        q_pos=g.q_pos, k_pos_fn=kpos_fn,
+        scale=scale, causal=causal, window=window, unroll=unroll,
+        kv_block=kv_block,
+    )
+    return scatter_o(finalize(part, dtype=q.dtype), layout)
+
+
+def sp_attention(
+    q: jax.Array,  # [B, L, Hq, D] global arrays (inside jit)
+    k: jax.Array,  # [B, L, Hkv, D]
+    v: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    cfg: SPConfig,
+    scale: float | None = None,
+    causal: bool = False,
+    window: int | None = None,
+) -> jax.Array:
+    """Distributed attention over the mesh per the configured SP strategy.
+
+    Sequence is sharded over ``cfg.sp_axes`` (flat-rank order), batch over
+    ``cfg.batch_axes``; heads/head_dim replicated inside the SP group.
+    """
+    if cfg.strategy == "full" or math.prod(mesh.shape[a] for a in cfg.sp_axes) == 1:
+        mask = MaskSpec(causal=causal, window=window)
+        return reference_attention(q, k, v, scale=scale, mask=mask)
+
+    layout = resolve_layout(cfg, mesh, q.shape[2], k.shape[2])
+    if cfg.replicate_kv and layout.p_ulysses > 1:
+        rep = layout.p_ulysses // math.gcd(layout.p_ulysses, k.shape[2])
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+
+    ba = cfg.batch_axes
+    spec = P(ba, cfg.sp_axes, None, None)
+
+    if cfg.strategy == "swift_torus":
+        body = partial(
+            torus_attention, layout=layout, scale=scale, causal=causal,
+            window=window, unroll=cfg.unroll_ring,
+            fused_pull_q=cfg.torus_fused_pull_q, kv_block=cfg.attn_kv_block,
+        )
+    else:
+        body = partial(
+            _usp_like, layout=layout, scale=scale, causal=causal,
+            window=window, unroll=cfg.unroll_ring, kv_block=cfg.attn_kv_block,
+        )
+
+    fn = jax.shard_map(
+        lambda q, k, v: body(q, k, v),
+        mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=spec,
+        check_vma=False,
+    )
+    return fn(q, k, v)

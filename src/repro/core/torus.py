@@ -1,0 +1,185 @@
+"""Torus Attention (paper §4.3, Algorithm 1): chunked, overlappable
+all-to-all fused with attention compute.
+
+The monolithic Ulysses all-to-all is decomposed into P_u - 1 point-to-point
+stages.  The diagonal chunk (head-slice u of device u's own shard) is
+*stationary* — §4.3's key observation — so compute starts immediately, and
+each stage-k transfer (a distance-k hop on the torus) is interleaved with
+attention on already-resident chunks:
+
+    stage 0        : RingAttn(Q_{t,t}, K_{t,t}, V_{t,t})          (no comm)
+    Pull-Q  k=1..N-1: recv Q chunk from u-k; RingAttn(vs local diag KV)
+                      while Q chunk for u+k is in flight
+    Pull-KV k=1..N-1: recv KV chunk from u-k; RingAttn(all Q vs recv'd KV)
+                      while KV chunk for u+k is in flight
+    Push-O         : inverse staged all-to-all of O (diagonal stays put)
+
+Q is scheduled before KV exactly as in the paper ("KV doubles the volume
+and is harder to hide").  Every per-stage compute is a full RINGATTN over
+the intra-machine Ring group, as in Algorithm 1.
+
+Deviations from Algorithm 1 (documented in DESIGN.md §2): the paper defers
+the diagonal Q's non-local-KV compute into the Push-O stage so NVSHMEM
+pushes overlap it at runtime.  XLA schedules statically, so we fold that
+compute into the Pull-KV stages and rely on the latency-hiding scheduler to
+overlap the staged Push-O permutes with *subsequent layer* compute — the
+same bytes move, on the same hops, in the same stage order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .collectives import GroupLayout, ppermute
+from .ring import ring_attention
+from .softmax import Partial, empty_partial, finalize, merge
+
+
+def _pin(acc: Partial) -> Partial:
+    """Schedule barrier on the accumulator chain."""
+    return Partial(*lax.optimization_barrier(tuple(acc)))
+
+
+def _gate(tensors: tuple, acc: Partial):
+    """Gate stage inputs on the running accumulator: stage k's attention
+    cannot start before stage k-1 merged, so only O(1) score matrices are
+    ever live (the ppermutes themselves don't consume acc and still get
+    hoisted/overlapped by the scheduler)."""
+    out = lax.optimization_barrier(tuple(tensors) + tuple(acc))
+    n = len(tensors)
+    return out[:n], Partial(*out[n:])
+from .ulysses import group_positions, scatter_o
+
+HEAD_AXIS = 2
+
+
+def _split_heads(x: jax.Array, p_u: int) -> jax.Array:
+    """[B, Ls, H, D] -> [P_u, B, Ls, H/P_u, D]; chunk j is destined to peer j."""
+    return jnp.stack(jnp.split(x, p_u, axis=HEAD_AXIS), axis=0)
+
+
+def _rank_of(layout: GroupLayout, u, r):
+    if layout.ulysses_outer:
+        return u * layout.p_ring + r
+    return r * layout.p_ulysses + u
+
+
+def _merge_slice(acc: Partial, upd: Partial, start: jax.Array, ls: int) -> Partial:
+    """Merge ``upd`` (covering q slice [start, start+ls)) into ``acc``."""
+    sl = lambda a, ax: lax.dynamic_slice_in_dim(a, start, ls, axis=ax)
+    cur = Partial(o=sl(acc.o, 1), l=sl(acc.l, 2), m=sl(acc.m, 2))
+    new = merge(cur, upd)
+    ins = lambda a, u, ax: lax.dynamic_update_slice_in_dim(a, u, start, axis=ax)
+    return Partial(
+        o=ins(acc.o, new.o, 1), l=ins(acc.l, new.l, 2), m=ins(acc.m, new.m, 2)
+    )
+
+
+def torus_attention(
+    q: jax.Array,  # [B, Ls, Hq, D] natural (seq-sharded) layout
+    k: jax.Array,  # [B, Ls, Hkv, D]
+    v: jax.Array,
+    layout: GroupLayout,
+    *,
+    scale: float | None = None,
+    causal: bool = False,
+    window: int | None = None,
+    unroll: bool = True,
+    fused_pull_q: bool = False,
+    kv_block: int | None = None,
+) -> jax.Array:
+    """Full SwiftFusion attention with the Torus schedule; returns O in the
+    original [B, Ls, Hq, D] sharding.
+
+    ``fused_pull_q`` is a beyond-paper optimization (EXPERIMENTS.md §Perf):
+    Algorithm 1 invokes RINGATTN once per Pull-Q stage, re-circulating the
+    *same* diagonal KV chunk through the Ring group P_u times.  The fused
+    variant keeps the staged (distance-k) Q permutes — identical inter-pod
+    wire schedule — but runs ONE ring circulation over the assembled
+    gathered Q, cutting Pull-Q intra-pod ring traffic by P_u×.  Trade-off:
+    diagonal-KV compute can no longer start before Q chunks arrive (the
+    permuted Q tensors are 2× smaller than KV and arrive early, so the
+    exposed latency is small)."""
+    p_u, p_r = layout.p_ulysses, layout.p_ring
+    b, ls, hq, d = q.shape
+    h = hq // p_u
+    u, r = layout.my_coords()
+
+    qc = _split_heads(q, p_u)  # [P_u, B, Ls, h, D]
+    kc = _split_heads(k, p_u)
+    vc = _split_heads(v, p_u)
+    k_diag, v_diag = jnp.take(kc, u, axis=0), jnp.take(vc, u, axis=0)
+
+    my_pos = lambda: _rank_of(layout, u, r) * ls + jnp.arange(ls)
+    chunk_pos = lambda src_u: _rank_of(layout, src_u, r) * ls + jnp.arange(ls)
+    # position of the diagonal KV chunk as it circulates the Ring group
+    diag_kpos_fn = lambda owner_r: _rank_of(layout, u, owner_r) * ls + jnp.arange(ls)
+
+    acc = empty_partial(b, p_u * ls, h, d)  # gathered-q accumulator, source-u order
+
+    if not fused_pull_q:
+        # ---- stage 0: stationary diagonal chunks, compute starts, no comm
+        part = ring_attention(
+            jnp.take(qc, u, axis=0), k_diag, v_diag, layout,
+            q_pos=my_pos(), k_pos_fn=diag_kpos_fn,
+            scale=scale, causal=causal, window=window, unroll=unroll,
+            kv_block=kv_block,
+        )
+        acc = _merge_slice(acc, part, u * ls, ls)
+
+    # ---- Pull-Q stages: Q chunks arrive one hop-distance k at a time
+    q_recv = [None] * p_u  # q_recv[j] = Q chunk from ulysses peer j
+    for kstage in range(1, p_u):
+        send = jnp.take(qc, (u + kstage) % p_u, axis=0)
+        recv = ppermute(send, layout.axes, layout.ulysses_stage_perm(kstage))
+        src = (u - kstage) % p_u
+        if not fused_pull_q:
+            part = ring_attention(
+                recv, k_diag, v_diag, layout,
+                q_pos=chunk_pos(src), k_pos_fn=diag_kpos_fn,
+                scale=scale, causal=causal, window=window, unroll=unroll,
+                kv_block=kv_block,
+            )
+            acc = _pin(_merge_slice(acc, part, src * ls, ls))
+        q_recv[kstage] = (src, recv)
+
+    # assemble the gathered Q (source-u order) for the Pull-KV stages
+    q_gather = jnp.zeros((p_u, b, ls, h, d), q.dtype)
+    q_gather = lax.dynamic_update_slice_in_dim(
+        q_gather, jnp.take(qc, u, axis=0)[None], u, axis=0
+    )
+    for src, recv in filter(None, q_recv):
+        q_gather = lax.dynamic_update_slice_in_dim(q_gather, recv[None], src, axis=0)
+    q_gather = jnp.moveaxis(q_gather, 0, 1).reshape(b, p_u * ls, h, d)
+    q_pos_all = group_positions(layout, ls, r)
+
+    if fused_pull_q:
+        # single ring circulation of the diagonal KV over ALL gathered Q
+        part = ring_attention(
+            q_gather, k_diag, v_diag, layout,
+            q_pos=q_pos_all, k_pos_fn=diag_kpos_fn,
+            scale=scale, causal=causal, window=window, unroll=unroll,
+            kv_block=kv_block,
+        )
+        acc = merge(acc, part)
+
+    # ---- Pull-KV stages: KV chunks arrive; all Q attends each new chunk
+    for kstage in range(1, p_u):
+        src = (u - kstage) % p_u
+        perm = layout.ulysses_stage_perm(kstage)
+        k_recv = ppermute(jnp.take(kc, (u + kstage) % p_u, axis=0), layout.axes, perm)
+        v_recv = ppermute(jnp.take(vc, (u + kstage) % p_u, axis=0), layout.axes, perm)
+        (k_recv, v_recv), acc = _gate((k_recv, v_recv), acc)
+        kpos_fn = lambda owner_r, s=src: _rank_of(layout, s, owner_r) * ls + jnp.arange(ls)
+        part = ring_attention(
+            q_gather, k_recv, v_recv, layout,
+            q_pos=q_pos_all, k_pos_fn=kpos_fn,
+            scale=scale, causal=causal, window=window, unroll=unroll,
+            kv_block=kv_block,
+        )
+        acc = merge(acc, part)
+
+    # ---- Push-O: staged inverse all-to-all; diagonal O never moves
+    o = finalize(acc, dtype=q.dtype)  # [B, P_u * Ls, h, D]
+    return scatter_o(o, layout)

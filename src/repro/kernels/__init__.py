@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: FlashAttention over
+multiple discontiguous Q/KV chunks with fused online-softmax merge
+(Algorithm 2, Appendix B/C)."""
+from .ops import flash_attention, flash_attention_segments
+from .ref import flash_attention_ref
+from .rwkv6_wkv import rwkv6_wkv
+
+__all__ = ["flash_attention", "flash_attention_segments",
+           "flash_attention_ref", "rwkv6_wkv"]

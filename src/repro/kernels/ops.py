@@ -1,0 +1,122 @@
+"""Jitted wrappers around the flash_mqkv Pallas kernel.
+
+``flash_attention``     — [B, L, H, D]-layout entry point with GQA,
+                          padding to block multiples, position arrays.
+``flash_attention_segments`` — the Algorithm-2 use case: one Q against a
+                          *list* of discontiguous KV chunks, carrying the
+                          online-softmax state across kernel calls and
+                          finalizing once (Appendix C).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_mqkv import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_mqkv
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _flatten_heads(x: jax.Array) -> jax.Array:
+    b, l, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+
+
+def _unflatten_heads(x: jax.Array, b: int, h: int) -> jax.Array:
+    bh, l, d = x.shape
+    return x.reshape(b, h, l, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # [B, Lq, Hq, D]
+    k: jax.Array,  # [B, Lk, Hkv, D]
+    v: jax.Array,
+    q_pos: jax.Array | None = None,  # [Lq]
+    k_pos: jax.Array | None = None,  # [Lk]
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Drop-in flash attention; returns [B, Lq, Hq, D]."""
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    group = hq // hkv
+    if q_pos is None:
+        q_pos = jnp.arange(lq, dtype=jnp.int32)
+    if k_pos is None:
+        k_pos = jnp.arange(lk, dtype=jnp.int32)
+
+    bq = min(block_q, max(8, lq))
+    bk = min(block_k, max(8, lk))
+    qf = _pad_to(_flatten_heads(q), 1, bq)
+    kf = _pad_to(_flatten_heads(k), 1, bk)
+    vf = _pad_to(_flatten_heads(v), 1, bk)
+    qpp = _pad_to(q_pos.astype(jnp.int32), 0, bq, value=0)
+    kpp = _pad_to(k_pos.astype(jnp.int32), 0, bk, value=-1)
+
+    o, _, _ = flash_mqkv(
+        qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
+        window=window, finalize=True, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )
+    return _unflatten_heads(o[:, :lq], b, hq)
+
+
+def flash_attention_segments(
+    q: jax.Array,  # [B, Lq, Hq, D]
+    segments: list[tuple[jax.Array, jax.Array, jax.Array]],  # (k, v, k_pos)
+    q_pos: jax.Array | None = None,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Attention of one Q against multiple discontiguous KV chunks — the
+    RINGATTN inner loop of Algorithm 1 with the Algorithm-2 fused merge:
+    the (O', l, m) state is carried across kernel calls, one division at
+    the very end."""
+    b, lq, hq, d = q.shape
+    if q_pos is None:
+        q_pos = jnp.arange(lq, dtype=jnp.int32)
+    bq = min(block_q, max(8, lq))
+    qf = _pad_to(_flatten_heads(q), 1, bq)
+    qpp = _pad_to(q_pos.astype(jnp.int32), 0, bq, value=0)
+
+    state = None
+    for i, (k, v, k_pos) in enumerate(segments):
+        _, lk, hkv, _ = k.shape
+        group = hq // hkv
+        bk = min(block_k, max(8, lk))
+        kf = _pad_to(_flatten_heads(k), 1, bk)
+        vf = _pad_to(_flatten_heads(v), 1, bk)
+        kpp = _pad_to(k_pos.astype(jnp.int32), 0, bk, value=-1)
+        last = i == len(segments) - 1
+        out = flash_mqkv(
+            qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
+            window=window, state=state, finalize=last,
+            block_q=bq, block_k=bk, interpret=interpret,
+        )
+        if last:
+            o = out[0]
+        else:
+            state = out
+    return _unflatten_heads(o[:, :lq].astype(q.dtype), b, hq)

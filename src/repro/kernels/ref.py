@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the flash_mqkv kernel (paper Algorithm 2 semantics).
+
+Same contract as kernels.ops.flash_attention: position-array masking
+(k_pos = -1 marks padding), optional carried-in online-softmax state, and
+optional finalization — the reference every kernel sweep asserts against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [BH, Lq, D]
+    k: jax.Array,  # [BH, Lk, D]
+    v: jax.Array,  # [BH, Lk, D]
+    q_pos: jax.Array,  # [Lq] int32 global positions
+    k_pos: jax.Array,  # [Lk] int32; -1 = padding (masked out)
+    *,
+    scale: float | None = None,
+    causal: bool = False,
+    window: int | None = None,
+    state: tuple[jax.Array, jax.Array, jax.Array] | None = None,  # (o', l, m)
+    finalize: bool = True,
+):
+    """Returns o [BH, Lq, D] if finalize else (o', l, m) FA2-style state."""
+    bh, lq, d = q.shape
+    lk = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    ok = (k_pos >= 0)[None, :]
+    if causal:
+        ok = ok & (q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        ok = ok & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(ok[None], s, NEG_INF)
+
+    m_cur = jnp.max(s, axis=-1)  # [BH, Lq]
+    if state is not None:
+        o_in, l_in, m_in = state
+        m_new = jnp.maximum(m_in, m_cur)
+    else:
+        o_in = jnp.zeros((bh, lq, d), jnp.float32)
+        l_in = jnp.zeros((bh, lq), jnp.float32)
+        m_in = jnp.full((bh, lq), NEG_INF, jnp.float32)
+        m_new = m_cur
+    safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    p = jnp.exp(s - safe_m[..., None])
+    p = jnp.where(jnp.isneginf(s), 0.0, p)
+    corr = jnp.where(jnp.isneginf(m_in) & jnp.isneginf(m_new), 0.0,
+                     jnp.exp(m_in - safe_m))
+    corr = jnp.where(jnp.isneginf(m_in), 0.0, corr)
+    l = l_in * corr + jnp.sum(p, axis=-1)
+    o = o_in * corr[..., None] + jnp.einsum("bqk,bkd->bqd", p,
+                                            v.astype(jnp.float32))
+    if not finalize:
+        return o, l, m_new
+    return (o / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)

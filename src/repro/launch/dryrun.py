@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks at first init); scoped to
+#   this module only — tests and benchmarks see 1 device.
+
+DOC = """Multi-pod dry-run (assignment deliverable (e)).
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real step function — train_step (optimizer included) for
+train shapes, prefill/serve steps for inference shapes — against
+ShapeDtypeStruct stand-ins (no allocation), prints memory_analysis() and
+cost_analysis(), and records the roofline terms (deliverable (g)).
+
+The 512 placeholder host devices above exist ONLY for this module; tests
+and benchmarks see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh pod --strategy swift_torus
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+__doc__ = DOC
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ALL_ARCHS, ASSIGNED_ARCHS, ModelConfig, SHAPES, get_config
+from ..configs.shapes import DIT_SHAPES, InputShape
+from ..core import SPConfig
+from ..models import ParallelContext, get_model, param_shardings
+from ..train.optimizer import AdamWConfig, init_adamw
+from ..train.trainer import batch_shardings, make_train_step
+from . import roofline as rl
+from .mesh import make_production_mesh
+
+LONG_CONTEXT_WINDOW = 4096
+
+
+def sp_config_for(shape: InputShape, mesh: Mesh, strategy: str,
+                  fused_pull_q: bool = False,
+                  kv_block: int | None = None) -> SPConfig:
+    """Map the assignment's input shapes onto the production mesh axes
+    (DESIGN.md §4)."""
+    multi_pod = "pod" in mesh.axis_names
+    kw = dict(strategy=strategy, torus_fused_pull_q=fused_pull_q,
+              attn_kv_block=kv_block)
+    if shape.kind == "training":
+        ba = ("pod", "data") if multi_pod else ("data",)
+        return SPConfig(sp_axes=("model",), batch_axes=ba, **kw)
+    if shape.kind == "prefill":
+        if shape.global_batch == 1:  # DiT workloads: B=1, seq over data too
+            sp = ("pod", "data", "model") if multi_pod else ("data", "model")
+            return SPConfig(sp_axes=sp, batch_axes=None, **kw)
+        sp = ("pod", "model") if multi_pod else ("model",)
+        return SPConfig(sp_axes=sp, batch_axes=("data",), **kw)
+    # decode
+    if shape.global_batch == 1:  # long_500k: all devices shard the context
+        sp = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return SPConfig(sp_axes=sp, batch_axes=None, **kw)
+    sp = ("pod", "model") if multi_pod else ("model",)
+    return SPConfig(sp_axes=sp, batch_axes=("data",), **kw)
+
+
+def config_for(arch: str, shape: InputShape) -> ModelConfig:
+    cfg = get_config(arch)
+    if (shape.name == "long_500k" and not cfg.attention_free
+            and cfg.window is None):
+        # sub-quadratic requirement: sliding-window variant (DESIGN.md §5)
+        cfg = dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def abstract_init(cfg: ModelConfig, ep_degree: int):
+    """Params as ShapeDtypeStructs (+ concrete logical axes) — no allocation."""
+    bundle = get_model(cfg)
+    captured = {}
+
+    def f(key):
+        params, axes = bundle.init(cfg, key, ep_degree)
+        captured["axes"] = axes
+        return params
+
+    params_sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return params_sds, captured["axes"], bundle
+
+
+def cache_shardings(caches_sds, mesh: Mesh, sp: SPConfig):
+    ba, sa = sp.batch_axes, sp.sp_axes
+
+    def spec(path, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):  # [layers, B, L, Hkv, D]
+            return NamedSharding(mesh, P(None, ba, sa, None, None))
+        # ssm states / shift buffers: replicate over SP, shard batch
+        return NamedSharding(mesh, P(None, ba, *([None] * (len(s.shape) - 2))))
+
+    return jax.tree_util.tree_map_with_path(spec, caches_sds)
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh, sp: SPConfig,
+               remat: str = "full", last_only: bool = False,
+               ep_token_gather: bool = False):
+    """Construct the jitted step fn + abstract args for one config."""
+    ep = mesh.shape.get("model", 1)
+    params_sds, axes, bundle = abstract_init(cfg, ep)
+    mode = "train" if shape.kind == "training" else "serve"
+    p_sh = param_shardings(axes, cfg, mesh, mode)
+    batch_sds = bundle.input_specs(cfg, shape, abstract=True)
+    b_sh = batch_shardings(batch_sds, mesh, sp)
+
+    if shape.kind == "training":
+        # bf16 Adam moments for arctic-class models (see AdamWConfig)
+        big = cfg.params_dense_estimate() > 1e11
+        opt_cfg = AdamWConfig(moments_dtype="bfloat16" if big else "float32")
+        opt_sds = jax.eval_shape(lambda p: init_adamw(p, opt_cfg), params_sds)
+        opt_sh = type(opt_sds)(
+            step=NamedSharding(mesh, P()),
+            mu=p_sh, nu=p_sh,
+        )
+        step_fn = make_train_step(cfg, mesh, sp, opt_cfg, remat=remat)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, opt_sh, b_sh),
+            out_shardings=(p_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        ctx = ParallelContext(mesh, sp, "prefill")
+        lo = last_only and cfg.family not in ("audio", "dit")
+
+        def prefill_step(params, batch):
+            if lo:
+                return bundle.apply(params, batch, cfg, ctx, last_only=True)
+            return bundle.apply(params, batch, cfg, ctx)
+
+        out_sh = NamedSharding(
+            mesh, P(sp.batch_axes, None if lo else sp.sp_axes, None))
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                         out_shardings=out_sh)
+        args = (params_sds, batch_sds)
+    else:  # decode
+        ctx = ParallelContext(mesh, sp, "decode",
+                              ep_token_gather=ep_token_gather)
+        caches_sds = jax.eval_shape(
+            lambda: bundle.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                       jnp.bfloat16))
+        c_sh = cache_shardings(caches_sds, mesh, sp)
+
+        def serve_step(params, batch, caches, cur_index):
+            return bundle.step(params, batch, caches, cur_index, cfg, ctx)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, b_sh, c_sh, NamedSharding(mesh, P())),
+            out_shardings=(None, c_sh),
+        )
+        args = (params_sds, batch_sds, caches_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args
+
+
+def _depth_variant(cfg: ModelConfig, n: int) -> ModelConfig:
+    kw = {"n_layers": n}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n
+    return dataclasses.replace(cfg, **kw)
+
+
+def _compile_costs(cfg, shape, mesh, sp, pod_size, remat="full",
+                   last_only=False, ep_token_gather=False):
+    jitted, args = build_step(cfg, shape, mesh, sp, remat=remat,
+                              last_only=last_only,
+                              ep_token_gather=ep_token_gather)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = rl.parse_collectives(compiled.as_text(), pod_size)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll.bytes_total), float(coll.bytes_inter_pod))
+
+
+def lower_pair(arch: str, shape_name: str, mesh: Mesh, strategy: str,
+               *, fused_pull_q: bool = False, remat: str = "full",
+               last_only: bool = False, ep_token_gather: bool = False,
+               kv_block: int | None = None):
+    """Lower + compile one (arch, shape, mesh, strategy). Returns result dict.
+
+    XLA's cost_analysis counts loop bodies ONCE, so the layer-scan cost is
+    recovered by a two-point extrapolation over depth: compile n_layers ∈
+    {1, 2} variants (inner loops are unrolled by construction) and take
+    cost(L) = cost(1) + (cost(2) - cost(1))·(L - 1).  memory_analysis and
+    the compile-success proof come from the FULL-depth compile.
+    """
+    shape = {**SHAPES, **DIT_SHAPES}[shape_name]
+    cfg = config_for(arch, shape)
+    sp = sp_config_for(shape, mesh, strategy, fused_pull_q, kv_block)
+    chips = math.prod(mesh.shape.values())
+    pod_size = chips // mesh.shape.get("pod", 1)
+
+    opt_kw = dict(remat=remat, last_only=last_only,
+                  ep_token_gather=ep_token_gather)
+    jitted, args = build_step(cfg, shape, mesh, sp, **opt_kw)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+
+    f1, b1, c1, i1 = _compile_costs(_depth_variant(cfg, 1), shape, mesh, sp,
+                                    pod_size, **opt_kw)
+    f2, b2, c2, i2 = _compile_costs(_depth_variant(cfg, 2), shape, mesh, sp,
+                                    pod_size, **opt_kw)
+    L = cfg.n_layers
+    # slope clamped at 0: fusion differences between the depth probes can
+    # make a term non-monotone by a few %; never extrapolate downward.
+    ext = lambda v1, v2: v1 + max(0.0, v2 - v1) * (L - 1)
+    cost = {"flops": ext(f1, f2), "bytes accessed": ext(b1, b2)}
+    coll_total, coll_inter = ext(c1, c2), ext(i1, i2)
+
+    if shape.kind == "training":
+        # fwd+bwd ≈ 3x forward matmul flops
+        mflops = 6.0 * cfg.params_active_estimate() * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        mflops = 2.0 * cfg.params_active_estimate() * shape.seq_len * shape.global_batch
+    else:
+        mflops = 2.0 * cfg.params_active_estimate() * 1 * shape.global_batch
+    roof = rl.analyze_from_terms(
+        flops=cost["flops"], byts=cost["bytes accessed"],
+        coll_bytes=coll_total, coll_inter=coll_inter,
+        chips=chips, model_flops=mflops,
+    )
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multipod" if "pod" in mesh.axis_names else "pod",
+        "strategy": strategy,
+        "fused_pull_q": fused_pull_q,
+        "remat": remat,
+        "last_only": last_only,
+        "ep_token_gather": ep_token_gather,
+        "kv_block": kv_block,
+        "chips": chips,
+        "step_kind": shape.kind,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "total_bytes": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                            + mem.generated_code_size_in_bytes),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "roofline": roof.as_dict(),
+        "window_variant": config_for(arch, shape).window,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--strategy", default="swift_torus")
+    ap.add_argument("--fused-pull-q", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--last-only", action="store_true")
+    ap.add_argument("--ep-token-gather", action="store_true")
+    ap.add_argument("--kv-block", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dit", action="store_true", help="also run DiT workloads")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    pairs = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in SHAPES:
+                pairs.append((arch, shape))
+        if args.dit:
+            for arch in ("flux-12b", "cogvideox-5b"):
+                for shape in DIT_SHAPES:
+                    pairs.append((arch, shape))
+    else:
+        pairs.append((args.arch, args.shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = 0
+    for arch, shape in pairs:
+        for mp in meshes:
+            mesh = make_production_mesh(multi_pod=mp)
+            tag = f"{arch}_{shape}_{'multipod' if mp else 'pod'}_{args.strategy}"
+            if args.tag:
+                tag += f"_{args.tag}"
+            try:
+                res = lower_pair(arch, shape, mesh, args.strategy,
+                                 fused_pull_q=args.fused_pull_q,
+                                 remat=args.remat, last_only=args.last_only,
+                                 ep_token_gather=args.ep_token_gather,
+                                 kv_block=args.kv_block)
+                with open(f"{args.out}/{tag}.json", "w") as f:
+                    json.dump(res, f, indent=1)
+                r = res["roofline"]
+                print(f"OK   {tag}: compile={res['compile_s']}s "
+                      f"mem={res['memory']['total_bytes']/2**30:.2f}GiB "
+                      f"t_comp={r['t_compute']:.2e} t_mem={r['t_memory']:.2e} "
+                      f"t_coll={r['t_collective']:.2e} -> {r['bottleneck']}",
+                      flush=True)
+                n_ok += 1
+            except Exception as e:
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+                n_fail += 1
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1, data: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (fake or real) devices exist — used by
+    smoke tests, examples, and the multidevice test suite."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,69 @@
+"""Production serving launcher: DiT sampling service or AR decode service.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch flux-12b --reduced --requests 4
+    ... --arch qwen2-1.5b --reduced --requests 4   (AR decode)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_reduced
+from ..core import SPConfig
+from ..models import get_model
+from ..serving import ARRequest, ARServer, DiTRequest, DiTServer, SamplerConfig
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--strategy", default="swift_torus")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "host"], default="host")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=4, help="sampling steps (DiT)")
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    if args.mesh == "host":
+        mesh = make_host_mesh(model=args.model, data=args.data)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg, dtype="float32", sharding_overrides=())
+    bundle = get_model(cfg)
+    params, _ = bundle.init(cfg, jax.random.PRNGKey(0), mesh.shape["model"])
+
+    sp_degree = mesh.shape["model"]
+    sp = SPConfig(strategy=args.strategy if sp_degree > 1 else "full",
+                  sp_axes=("model",), batch_axes=("data",))
+
+    if cfg.family == "dit":
+        srv = DiTServer(params, cfg, mesh, sp,
+                        sampler=SamplerConfig(num_steps=args.steps))
+        for i in range(args.requests):
+            srv.submit(DiTRequest(rid=i, seq_len=args.seq))
+        for r in srv.serve():
+            print(f"request {r.rid}: latents {tuple(r.latents.shape)} "
+                  f"latency {r.latency * 1e3:.1f} ms")
+    else:
+        srv = ARServer(params, cfg, mesh, sp, batch_slots=4,
+                       max_len=args.seq)
+        for i in range(args.requests):
+            srv.submit(ARRequest(rid=i,
+                                 prompt=jnp.arange(1, 4 + i, dtype=jnp.int32),
+                                 max_new_tokens=8))
+        for rid, toks in sorted(srv.serve().items()):
+            print(f"request {rid}: -> {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Production training launcher.
+
+On real hardware this runs under the TPU runtime with the production mesh;
+on this container it can be exercised with fake devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.train --arch qwen2-1.5b --steps 10 \
+        --mesh host --data 2 --model 4 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from ..configs import get_config, get_reduced
+from ..configs.shapes import SHAPES, InputShape
+from ..core import SPConfig
+from ..train import AdamWConfig, Trainer
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None, help="assigned shape name")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--strategy", default="swift_torus")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "host"], default="host")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.mesh == "host":
+        mesh = make_host_mesh(model=args.model, data=args.data)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg, dtype="float32", sharding_overrides=())
+    shape = (SHAPES[args.shape] if args.shape
+             else InputShape("cli", args.seq, args.batch, "training"))
+    sp_degree = mesh.shape["model"]
+    sp = SPConfig(strategy=args.strategy if sp_degree > 1 else "full",
+                  sp_axes=("model",), batch_axes=("data",))
+    tr = Trainer(cfg, mesh, sp, shape,
+                 opt_cfg=AdamWConfig(total_steps=args.steps),
+                 ckpt_path=args.ckpt)
+    tr.run(args.steps)
+
+
+if __name__ == "__main__":
+    main()

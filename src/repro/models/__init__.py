@@ -1,0 +1,13 @@
+from .blocks import ParallelContext, Params
+from .registry import ModelBundle, get_model
+from .sharding import param_pspecs, param_shardings, rules_for
+
+__all__ = [
+    "ModelBundle",
+    "ParallelContext",
+    "Params",
+    "get_model",
+    "param_pspecs",
+    "param_shardings",
+    "rules_for",
+]

@@ -1,0 +1,118 @@
+"""Diffusion Transformer (the paper's own workload family).
+
+Latent patches arrive pre-patchified (VAE + patchifier stubbed per
+DESIGN.md §6) together with a text-conditioning token sequence; the model
+concatenates [cond ; latents], runs adaLN-zero DiT blocks with the
+configured SP attention strategy (bidirectional — DiTs are non-causal),
+and projects the latent positions back to the latent channel dim,
+predicting the flow-matching velocity.
+
+This is the model the serving engine (serving/engine.py) samples with.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .blocks import (
+    ParallelContext,
+    ParamBuilder,
+    Params,
+    attention,
+    init_attention,
+    init_linear,
+    init_mlp,
+    init_norm,
+    linear,
+    mlp,
+    norm,
+    sinusoidal_embedding,
+    stack_layers,
+)
+
+LATENT_CHANNELS = 64
+COND_TOKENS = 256
+TIME_EMB = 256
+
+
+def _init_block(key, cfg: ModelConfig):
+    b = ParamBuilder(key, dtype=jnp.dtype(cfg.dtype))
+    init_norm(b, "ln_attn", cfg.d_model, cfg.norm)
+    init_attention(b, cfg)
+    init_norm(b, "ln_mlp", cfg.d_model, cfg.norm)
+    init_mlp(b, cfg)
+    # adaLN-zero: 6 modulation vectors from the time embedding; zero-init so
+    # blocks start as identity (DiT paper).
+    init_linear(b, "ada", cfg.d_model, 6 * cfg.d_model, ("embed", None),
+                init="zeros")
+    return b.params, b.axes
+
+
+def init_dit(cfg: ModelConfig, key: jax.Array, ep_degree: int = 1):
+    k1, k2 = jax.random.split(key)
+    b = ParamBuilder(k1, dtype=jnp.dtype(cfg.dtype))
+    init_linear(b, "proj_in", LATENT_CHANNELS, cfg.d_model, (None, "embed"))
+    init_linear(b, "cond_proj", cfg.d_model, cfg.d_model, ("embed", "embed_out"))
+    init_linear(b, "time_mlp1", TIME_EMB, cfg.d_model, (None, "embed"))
+    init_linear(b, "time_mlp2", cfg.d_model, cfg.d_model, ("embed", "embed_out"))
+    init_norm(b, "ln_f", cfg.d_model, cfg.norm)
+    init_linear(b, "ada_f", cfg.d_model, 2 * cfg.d_model, ("embed", None),
+                init="zeros")
+    init_linear(b, "proj_out", cfg.d_model, LATENT_CHANNELS, ("embed", None),
+                init="zeros")
+    params, axes = b.params, b.axes
+    lp, la = stack_layers(partial(_init_block, cfg=cfg), cfg.n_layers, k2)
+    params["layers"], axes["layers"] = lp, la
+    return params, axes
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None]) + shift[:, None]
+
+
+def dit_forward(
+    params: Params,
+    cfg: ModelConfig,
+    ctx: ParallelContext,
+    *,
+    latents: jax.Array,  # [B, T, LATENT_CHANNELS]
+    cond: jax.Array,  # [B, COND_TOKENS, d] (stub text encoder output)
+    timesteps: jax.Array,  # [B] in [0, 1]
+) -> jax.Array:
+    """Returns predicted velocity [B, T, LATENT_CHANNELS]."""
+    b_, t_, _ = latents.shape
+    x_lat = linear(latents, params["proj_in"])
+    x_cond = linear(cond, params["cond_proj"])
+    x = jnp.concatenate([x_cond, x_lat], axis=1)
+    l_ = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(l_)[None], (b_, l_))
+
+    temb = sinusoidal_embedding(TIME_EMB, TIME_EMB)  # reuse table as freqs
+    t_feat = jnp.concatenate(
+        [jnp.sin(timesteps[:, None] * 1000.0 * temb[0, : TIME_EMB // 2]),
+         jnp.cos(timesteps[:, None] * 1000.0 * temb[0, : TIME_EMB // 2])],
+        axis=-1,
+    ).astype(x.dtype)
+    t_emb = linear(jax.nn.silu(linear(t_feat, params["time_mlp1"])),
+                   params["time_mlp2"])  # [B, d]
+
+    def body(x, lp):
+        mod = linear(t_emb, lp["ada"])  # [B, 6d]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        h = _modulate(norm(x, lp["ln_attn"], cfg.norm), sh1, sc1)
+        o, _ = attention(h, lp["attn"], cfg, ctx, positions, causal=False)
+        x = x + g1[:, None] * o
+        h = _modulate(norm(x, lp["ln_mlp"], cfg.norm), sh2, sc2)
+        x = x + g2[:, None] * mlp(h, lp["mlp"], cfg)
+        return x, None
+
+    body = ctx.remat_wrap(body)
+    x, _ = lax.scan(body, x, params["layers"], unroll=cfg.n_layers <= 2)
+    sh, sc = jnp.split(linear(t_emb, params["ada_f"]), 2, axis=-1)
+    x = _modulate(norm(x, params["ln_f"], cfg.norm), sh, sc)
+    v = linear(x, params["proj_out"])
+    return v[:, COND_TOKENS:]  # velocity for latent positions only

@@ -1,0 +1,76 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Params carry logical axis names (built by ParamBuilder); these rules map
+them to mesh axes per deployment mode.  The paper's serving setup keeps
+model weights replicated across the SP group (DiTs are small, activations
+are huge) — that is the default.  Big assigned archs override via
+``ModelConfig.sharding_overrides`` (e.g. arctic shards experts over
+'model' and expert hidden dims over 'data'); training additionally shards
+optimizer-heavy dims over 'data' (ZeRO-style).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# logical axis -> tuple of mesh axes ((), = replicated)
+BASE_RULES: dict[str, tuple[str, ...]] = {
+    "vocab": (),
+    "embed": (),
+    "embed_out": (),
+    "embed_norm": (),
+    "mlp": (),
+    "heads_flat": (),
+    "kv_heads_flat": (),
+    "experts": ("model",),
+    "expert_mlp": ("data",),
+    "ssm_heads": (),
+    "layers": (),
+}
+
+TRAIN_EXTRAS: dict[str, tuple[str, ...]] = {
+    # shard the optimizer-dominant dims over data (ZeRO / weight FSDP).
+    # "vocab" stays per-config (whisper/hymba vocabs aren't divisible by 16).
+    "mlp": ("data",),
+    "heads_flat": ("data",),
+    "kv_heads_flat": ("data",),
+}
+
+
+def rules_for(cfg: ModelConfig, mode: str) -> dict[str, tuple[str, ...]]:
+    rules = dict(BASE_RULES)
+    if mode == "train":
+        rules.update(TRAIN_EXTRAS)
+    rules.update({k: tuple(v) for k, v in cfg.sharding_overrides})
+    return rules
+
+
+def _spec_of(logical: tuple[str | None, ...], rules, mesh: Mesh) -> P:
+    entries = []
+    for name in logical:
+        axes = rules.get(name, ()) if name is not None else ()
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        entries.append(axes if axes else None)
+    return P(*entries)
+
+
+def param_shardings(axes_tree, cfg: ModelConfig, mesh: Mesh, mode: str):
+    """Pytree of NamedSharding mirroring the params pytree."""
+    rules = rules_for(cfg, mode)
+    is_leaf = lambda x: isinstance(x, tuple)
+    return jax.tree.map(
+        lambda lg: NamedSharding(mesh, _spec_of(lg, rules, mesh)),
+        axes_tree,
+        is_leaf=is_leaf,
+    )
+
+
+def param_pspecs(axes_tree, cfg: ModelConfig, mesh: Mesh, mode: str):
+    """Same but raw PartitionSpecs (for in_shardings on lowered fns)."""
+    rules = rules_for(cfg, mode)
+    is_leaf = lambda x: isinstance(x, tuple)
+    return jax.tree.map(
+        lambda lg: _spec_of(lg, rules, mesh), axes_tree, is_leaf=is_leaf
+    )

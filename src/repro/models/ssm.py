@@ -1,0 +1,244 @@
+"""Linear-recurrence (SSM) substrate: chunked scans + distributed sequence
+sharding for attention-free architectures (rwkv6) and hybrid SSM branches
+(hymba).
+
+The paper's SP technique assumes softmax attention; for linear recurrences
+``S_t = a_t ⊙ S_{t-1} + b_t`` the sequence dimension is sharded instead
+with a **two-pass distributed prefix scan** (DESIGN.md §5):
+
+  pass 1 (local)   : chunked scan with S_in = 0 → outputs₀, device totals
+                     (A_dev = ∏ decays, B_dev = final state)
+  exchange         : exclusive prefix scan of (A_dev, B_dev) across SP ranks
+                     — log₂P Hillis-Steele rounds of `ppermute` (the same
+                     one-sided primitive the attention path uses)
+  pass 2 (local)   : outputs = outputs₀ + influence(S_in)
+
+The linear-recurrence composition ((a₂,b₂)∘(a₁,b₁) = (a₂a₁, a₂b₁+b₂)) is
+associative, so the cross-device pass is exact, not an approximation.
+
+Two chunk kernels:
+  * rwkv6 (Finch): per-channel data-dependent decay w_t, bonus u, state
+    [N_k, N_v] per head (GLA-style chunk trick with cumulative-decay
+    normalisation).
+  * ssd (mamba2-style scalar-per-head decay), used by the hymba branch.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+EPS = 1e-6
+
+
+class ScanResult(NamedTuple):
+    out: jax.Array  # outputs with S_in = 0
+    a_dev: jax.Array  # total decay across the local sequence
+    s_out: jax.Array  # final state with S_in = 0
+    infl: jax.Array  # per-token influence of S_in on the output
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunk scan (per-channel decay, state [Nk, Nv] per head)
+# ---------------------------------------------------------------------------
+
+def rwkv6_chunk_scan(
+    r: jax.Array,  # [B, L, H, N]
+    k: jax.Array,  # [B, L, H, N]
+    v: jax.Array,  # [B, L, H, N]
+    w: jax.Array,  # [B, L, H, N] decay in (0, 1]
+    u: jax.Array,  # [H, N] bonus for the current token
+    chunk: int = 64,
+) -> ScanResult:
+    b, l, h, n = r.shape
+    c = min(chunk, l)
+    assert l % c == 0, (l, c)
+    nc = l // c
+    rs = lambda x: x.reshape(b, nc, c, h, n)
+    r_, k_, v_, w_ = rs(r), rs(k), rs(v), rs(w)
+    w_ = jnp.clip(w_.astype(jnp.float32), EPS, 1.0)
+    logw = jnp.log(w_)
+    # D[t] = prod_{s<=t} w_s within chunk (inclusive), in log space
+    logD = jnp.cumsum(logw, axis=2)
+    D = jnp.exp(logD)  # [b, nc, c, h, n]
+    Dm1 = jnp.exp(logD - logw)  # D[t-1] (exclusive)
+    a_chunk = D[:, :, -1]  # [b, nc, h, n] total chunk decay
+
+    rf = r_.astype(jnp.float32)
+    kf = k_.astype(jnp.float32)
+    vf = v_.astype(jnp.float32)
+    # pairwise intra-chunk term: A[t,s] = (r_t ⊙ D_{t-1}) · (k_s / D_s), s < t
+    r_sc = rf * Dm1
+    k_sc = kf / D
+    att = jnp.einsum("bgthn,bgshn->bghts", r_sc, k_sc)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    # bonus diagonal: r_t · (u ⊙ k_t)
+    diag = jnp.einsum("bgthn,hn,bgthn->bgth", rf, u.astype(jnp.float32), kf)
+    out = jnp.einsum("bghts,bgshn->bgthn", att, vf)
+    out = out + diag[..., None] * vf
+
+    # cross-chunk: sequential scan over chunks carrying S [b, h, n, n]
+    # state contribution of chunk g: sum_s (a_chunk/D_s ⊙ k_s) ⊗ v_s
+    k_tail = jnp.einsum("bghn,bgshn->bgshn", a_chunk, k_sc)  # k_s * (a_c / D_s)
+    b_chunk = jnp.einsum("bgshn,bgshm->bghnm", k_tail, vf)
+
+    def step(S, xs):
+        a_g, b_g, rsc_g = xs  # [b,h,n], [b,h,n,m], [b,c,h,n]
+        o_corr = jnp.einsum("bthn,bhnm->bthm", rsc_g, S)
+        S = a_g[..., None] * S + b_g
+        return S, o_corr
+
+    S0 = jnp.zeros((b, h, n, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(a_chunk, 1, 0),
+        jnp.moveaxis(b_chunk, 1, 0),
+        jnp.moveaxis(r_sc, 1, 0),
+    )
+    s_out, o_corr = lax.scan(step, S0, xs, unroll=True)
+    out = out + jnp.moveaxis(o_corr, 0, 1)
+
+    a_dev = jnp.exp(jnp.sum(logw, axis=(1, 2)))  # [b, h, n]
+    # influence of S_in on token t: r_t ⊙ (prefix decay up to t-1)
+    prefix = jnp.exp(jnp.cumsum(logw.reshape(b, l, h, n), axis=1)
+                     - logw.reshape(b, l, h, n))
+    infl = r.astype(jnp.float32) * prefix  # [b, l, h, n]
+    return ScanResult(
+        out=out.reshape(b, l, h, n), a_dev=a_dev, s_out=s_out, infl=infl
+    )
+
+
+def rwkv6_apply_influence(out: jax.Array, infl: jax.Array, s_in: jax.Array) -> jax.Array:
+    return out + jnp.einsum("blhn,bhnm->blhm", infl, s_in)
+
+
+def rwkv6_decode_step(r, k, v, w, u, s):  # all [B, H, N]; s [B, H, N, N]
+    w = jnp.clip(w.astype(jnp.float32), EPS, 1.0)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]  # [B, H, N, N]
+    o = jnp.einsum("bhn,bhnm->bhm", rf, s + u.astype(jnp.float32)[..., None] * kv)
+    s = w[..., None] * s + kv
+    return o, s
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan (mamba2-style scalar-per-head decay) for hymba
+# ---------------------------------------------------------------------------
+
+def ssd_chunk_scan(
+    x: jax.Array,  # [B, L, H, P] (P = channels per head)
+    dt: jax.Array,  # [B, L, H] positive step sizes
+    Bm: jax.Array,  # [B, L, H, N] input projection
+    Cm: jax.Array,  # [B, L, H, N] output projection
+    a: jax.Array,  # [H] negative per-head decay rate
+    chunk: int = 64,
+) -> ScanResult:
+    b, l, h, p_ = x.shape
+    n = Bm.shape[-1]
+    c = min(chunk, l)
+    assert l % c == 0
+    nc = l // c
+    dtl = dt.astype(jnp.float32).reshape(b, nc, c, h)
+    loggam = dtl * a.astype(jnp.float32)  # log decay per token, ≤ 0
+    T = jnp.cumsum(loggam, axis=2)  # within-chunk cumulative
+    xs_ = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]).reshape(
+        b, nc, c, h, p_)
+    Bc = Bm.astype(jnp.float32).reshape(b, nc, c, h, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, nc, c, h, n)
+
+    # intra-chunk: L[t,s] = exp(T_t - T_s), s <= t
+    Lmat = jnp.exp(T[:, :, :, None] - T[:, :, None, :]).transpose(0, 1, 4, 2, 3)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Lmat = jnp.where(tri[None, None, None], Lmat, 0.0)
+    cb = jnp.einsum("bgthn,bgshn->bghts", Cc, Bc)
+    out = jnp.einsum("bghts,bgshp->bgthp", cb * Lmat, xs_)
+
+    # cross-chunk state carry: S [b, h, p, n]
+    gam_c = jnp.exp(T[:, :, -1])  # [b, nc, h]
+    # chunk state contribution: sum_s exp(T_c - T_s) ⊙ (xs_s ⊗ B_s)
+    b_chunk = jnp.einsum("bgsh,bgshp,bgshn->bghpn",
+                         jnp.exp(T[:, :, -1][:, :, None] - T), xs_, Bc)
+    c_infl = jnp.exp(T)  # decay from chunk start to t (inclusive)
+
+    def step(S, xsit):
+        g, bg, Cg, inf = xsit
+        o_corr = jnp.einsum("bth,bthn,bhpn->bthp", inf, Cg, S)
+        S = g[..., None, None] * S + bg
+        return S, o_corr
+
+    S0 = jnp.zeros((b, h, p_, n), jnp.float32)
+    xs_scan = (
+        jnp.moveaxis(gam_c, 1, 0),
+        jnp.moveaxis(b_chunk, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(c_infl, 1, 0),
+    )
+    s_out, o_corr = lax.scan(step, S0, xs_scan, unroll=True)
+    out = out + jnp.moveaxis(o_corr, 0, 1)
+
+    a_dev = jnp.exp(jnp.sum(loggam, axis=(1, 2)))  # [b, h]
+    # influence: Γ_t (from device start) ⊙ C_t · S_in
+    full_T = jnp.cumsum((dt.astype(jnp.float32) * a.astype(jnp.float32)), axis=1)
+    infl = jnp.exp(full_T)[..., None] * Cm.astype(jnp.float32)  # [b, l, h, n]
+    return ScanResult(
+        out=out.reshape(b, l, h, p_), a_dev=a_dev, s_out=s_out, infl=infl
+    )
+
+
+def ssd_apply_influence(out, infl, s_in):
+    return out + jnp.einsum("blhn,bhpn->blhp", infl, s_in)
+
+
+def ssd_decode_step(x, dt, Bm, Cm, a, s):
+    # x [B,H,P], dt [B,H], Bm/Cm [B,H,N], s [B,H,P,N]
+    g = jnp.exp(dt.astype(jnp.float32) * a.astype(jnp.float32))  # [B,H]
+    upd = jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32) * dt[..., None], Bm)
+    s = g[..., None, None] * s + upd
+    o = jnp.einsum("bhpn,bhn->bhp", s, Cm.astype(jnp.float32))
+    return o, s
+
+
+# ---------------------------------------------------------------------------
+# distributed exclusive prefix scan over SP ranks (log-depth ppermute)
+# ---------------------------------------------------------------------------
+
+def _exclusive_scan(a_dev, b_dev, axes, size):
+    """Exclusive prefix 'composition' scan of per-device (A, B) recurrence
+    summaries across the flattened SP axes.  Identity = (1, 0).
+
+    Hillis-Steele inclusive scan (log₂ size ppermute rounds — wait-free
+    one-sided hops, no ring serialisation), then shift right by one rank."""
+    rank = lax.axis_index(axes)
+
+    def bc(a, like):
+        return a.reshape(a.shape + (1,) * (like.ndim - a.ndim))
+
+    a, b = a_dev.astype(jnp.float32), b_dev.astype(jnp.float32)
+    d = 1
+    while d < size:
+        perm = [(i, i + d) for i in range(size - d)]
+        a_r = lax.ppermute(a, axes, perm)
+        b_r = lax.ppermute(b, axes, perm)
+        use = rank >= d
+        new_a = a * a_r
+        new_b = bc(a, b) * b_r + b
+        a = jnp.where(use, new_a, a)
+        b = jnp.where(bc(use, b), new_b, b)
+        d *= 2
+    # shift inclusive -> exclusive: take (a, b) of rank - 1; rank 0 = identity
+    perm1 = [(i, i + 1) for i in range(size - 1)]
+    b_prev = lax.ppermute(b, axes, perm1)
+    s_in = jnp.where(rank >= 1, b_prev, jnp.zeros_like(b_prev))
+    return s_in
+
+
+def distributed_state_in(a_dev, s_out, axes, size):
+    """S_in for each SP rank given per-rank (total decay, zero-init state)."""
+    if size == 1:
+        return jnp.zeros_like(s_out)
+    return _exclusive_scan(a_dev, s_out, axes, size)

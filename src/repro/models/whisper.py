@@ -1,0 +1,145 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv feature extractor is the stubbed modality
+frontend (DESIGN.md §6): the model consumes precomputed frame embeddings
+[B, encoder_seq, d_model].  Everything else — sinusoidal positions,
+bidirectional encoder, causal decoder with cross-attention — is real.
+
+Decode mode: self-attention KV is cached (sharded over SP axes); the
+encoder memory is passed in and cross-attention recomputes its K/V per
+step (memory is small: 1.5k frames).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .blocks import (
+    ParallelContext,
+    ParamBuilder,
+    Params,
+    attention,
+    init_attention,
+    init_mlp,
+    init_norm,
+    linear,
+    mlp,
+    norm,
+    sinusoidal_embedding,
+    stack_layers,
+)
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    b = ParamBuilder(key, dtype=jnp.dtype(cfg.dtype))
+    init_norm(b, "ln_attn", cfg.d_model, cfg.norm)
+    init_attention(b, cfg)
+    init_norm(b, "ln_mlp", cfg.d_model, cfg.norm)
+    init_mlp(b, cfg)
+    return b.params, b.axes
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    b = ParamBuilder(key, dtype=jnp.dtype(cfg.dtype))
+    init_norm(b, "ln_self", cfg.d_model, cfg.norm)
+    init_attention(b, cfg, prefix="self_attn")
+    init_norm(b, "ln_cross", cfg.d_model, cfg.norm)
+    init_attention(b, cfg, prefix="cross_attn")
+    init_norm(b, "ln_mlp", cfg.d_model, cfg.norm)
+    init_mlp(b, cfg)
+    return b.params, b.axes
+
+
+def init_whisper(cfg: ModelConfig, key: jax.Array, ep_degree: int = 1):
+    k1, k2, k3 = jax.random.split(key, 3)
+    b = ParamBuilder(k1, dtype=jnp.dtype(cfg.dtype))
+    b.add("embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    init_norm(b, "ln_enc_f", cfg.d_model, cfg.norm)
+    init_norm(b, "ln_dec_f", cfg.d_model, cfg.norm)
+    params, axes = b.params, b.axes
+    ep, ea = stack_layers(partial(_init_enc_layer, cfg=cfg), cfg.encoder_layers, k2)
+    dp, da = stack_layers(partial(_init_dec_layer, cfg=cfg), cfg.n_layers, k3)
+    params["enc_layers"], axes["enc_layers"] = ep, ea
+    params["dec_layers"], axes["dec_layers"] = dp, da
+    return params, axes
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           ctx: ParallelContext) -> jax.Array:
+    """frames [B, T_enc, d] (stub frontend output) -> memory [B, T_enc, d]."""
+    t = frames.shape[1]
+    x = frames + sinusoidal_embedding(t, cfg.d_model).astype(frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(t)[None], frames.shape[:2])
+    enc_ctx = ctx if not ctx.decode else ParallelContext(ctx.mesh, ctx.sp, "prefill")
+
+    def body(x, lp):
+        h = norm(x, lp["ln_attn"], cfg.norm)
+        o, _ = attention(h, lp["attn"], cfg, enc_ctx, positions, causal=False)
+        x = x + o
+        x = x + mlp(norm(x, lp["ln_mlp"], cfg.norm), lp["mlp"], cfg)
+        return x, None
+
+    body = enc_ctx.remat_wrap(body) if ctx.mode == "train" else body
+    x, _ = lax.scan(body, x, params["enc_layers"],
+                    unroll=cfg.encoder_layers <= 2)
+    return norm(x, params["ln_enc_f"], cfg.norm)
+
+
+def decode_forward(
+    params: Params,
+    cfg: ModelConfig,
+    ctx: ParallelContext,
+    *,
+    tokens: jax.Array,  # [B, L]
+    memory: jax.Array,  # [B, T_enc, d] encoder output
+    caches: Params | None = None,
+    cur_index: jax.Array | None = None,
+) -> tuple[jax.Array, Params | None]:
+    b_, l_ = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if ctx.decode:
+        positions = jnp.broadcast_to(cur_index, (b_, 1)).astype(jnp.int32)
+        pos_emb = sinusoidal_embedding(4 * 65536, cfg.d_model)[cur_index][None, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(l_)[None], (b_, l_))
+        pos_emb = sinusoidal_embedding(l_, cfg.d_model)[None]
+    x = x + pos_emb.astype(x.dtype)
+
+    def body(carry, xs):
+        x = carry
+        lp = xs["params"]
+        cache = xs.get("cache")
+        h = norm(x, lp["ln_self"], cfg.norm)
+        kv_cache = (cache["k"], cache["v"]) if ctx.decode else None
+        o, upd = attention(h, lp["self_attn"], cfg, ctx, positions,
+                           kv_cache=kv_cache, cur_index=cur_index, causal=True)
+        x = x + o
+        h = norm(x, lp["ln_cross"], cfg.norm)
+        o, _ = attention(h, lp["cross_attn"], cfg, ctx, positions, xkv=memory,
+                         causal=False)
+        x = x + o
+        x = x + mlp(norm(x, lp["ln_mlp"], cfg.norm), lp["mlp"], cfg)
+        new_cache = {"k": upd[0], "v": upd[1]} if ctx.decode else {}
+        return x, new_cache
+
+    xs = {"params": params["dec_layers"]}
+    if caches is not None:
+        xs["cache"] = caches
+    body = ctx.remat_wrap(body)
+    x, new_caches = lax.scan(body, x, xs, unroll=cfg.n_layers <= 2)
+    x = norm(x, params["ln_dec_f"], cfg.norm)
+    logits = jnp.einsum("bld,vd->blv", x, params["embed"].astype(x.dtype))
+    return logits, new_caches if caches is not None else None
+
+
+def init_whisper_caches(cfg: ModelConfig, batch: int, max_len: int,
+                        dtype=jnp.bfloat16) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, hkv, hd), dtype),
+    }

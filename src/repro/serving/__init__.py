@@ -1,0 +1,14 @@
+from .engine import ARRequest, ARServer, DiTRequest, DiTResult, DiTServer
+from .sampler import SamplerConfig, sample, sample_step, toy_vae_decode
+
+__all__ = [
+    "ARRequest",
+    "ARServer",
+    "DiTRequest",
+    "DiTResult",
+    "DiTServer",
+    "SamplerConfig",
+    "sample",
+    "sample_step",
+    "toy_vae_decode",
+]

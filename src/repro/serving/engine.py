@@ -1,0 +1,228 @@
+"""Serving engines.
+
+DiTServer — the paper's scenario: requests ask for an image/video at a
+given latent sequence length; compatible requests (same length) are
+batched, the flow-matching sampler runs with the configured SP strategy,
+and results stream back.  One jitted step per (batch, seq) bucket.
+
+ARServer — autoregressive decode for the LM-family assigned archs:
+slot-based continuous batching (fixed B decode slots; prefill on admit;
+every engine tick advances all active slots one token through the
+sequence-sharded KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import SPConfig
+from ..models import ParallelContext, get_model
+from ..models.dit import COND_TOKENS
+from .sampler import SamplerConfig, sample_step
+
+
+# ---------------------------------------------------------------------------
+# DiT serving (paper §5 workloads)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DiTRequest:
+    rid: int
+    seq_len: int  # latent tokens (resolution / duration proxy)
+    cond: jax.Array | None = None  # [COND_TOKENS, d] text embedding (stub)
+    submitted: float = 0.0
+
+
+@dataclasses.dataclass
+class DiTResult:
+    rid: int
+    latents: jax.Array
+    latency: float
+    sampling_steps: int
+
+
+class DiTServer:
+    def __init__(self, params, cfg: ModelConfig, mesh, sp: SPConfig,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 max_batch: int = 4):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ParallelContext(mesh, sp, "prefill")
+        self.sampler = sampler
+        self.max_batch = max_batch
+        self.queue: deque[DiTRequest] = deque()
+        self._step_cache: dict[tuple[int, int], Callable] = {}
+        self._rng = jax.random.PRNGKey(0)
+
+    def submit(self, req: DiTRequest) -> None:
+        req.submitted = time.time()
+        self.queue.append(req)
+
+    def _step_fn(self, batch: int, seq: int) -> Callable:
+        key = (batch, seq)
+        if key not in self._step_cache:
+            dt = 1.0 / self.sampler.num_steps
+
+            def f(params, x, cond, t):
+                return sample_step(params, self.cfg, self.ctx, x, cond, t,
+                                   dt, self.sampler)
+
+            self._step_cache[key] = jax.jit(f)
+        return self._step_cache[key]
+
+    def _next_batch(self) -> list[DiTRequest]:
+        """Greedy same-length batching (SP requires uniform seq per batch)."""
+        if not self.queue:
+            return []
+        head = self.queue[0]
+        batch, rest = [], deque()
+        while self.queue and len(batch) < self.max_batch:
+            r = self.queue.popleft()
+            (batch if r.seq_len == head.seq_len else rest).append(r)
+        while rest:
+            self.queue.appendleft(rest.pop())
+        return batch
+
+    def _dp_degree(self) -> int:
+        import math
+        ba = self.ctx.sp.batch_axes or ()
+        return math.prod(self.ctx.mesh.shape[a] for a in ba)
+
+    def run_once(self) -> list[DiTResult]:
+        batch = self._next_batch()
+        if not batch:
+            return []
+        # pad the batch up to a multiple of the data-parallel degree (SPMD
+        # batch sharding requires divisibility); padded rows are dropped.
+        dp = self._dp_degree()
+        n_real = len(batch)
+        b = -(-n_real // dp) * dp
+        t = batch[0].seq_len
+        d = self.cfg.d_model
+        cond = jnp.stack([
+            (batch[i].cond if i < n_real and batch[i].cond is not None
+             else jnp.zeros((COND_TOKENS, d), self.cfg.dtype))
+            for i in range(b)
+        ])
+        self._rng, sub = jax.random.split(self._rng)
+        x = jax.random.normal(sub, (b, t, 64), self.cfg.dtype)
+        fn = self._step_fn(b, t)
+        dt = 1.0 / self.sampler.num_steps
+        for i in range(self.sampler.num_steps):
+            x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
+        x.block_until_ready()
+        now = time.time()
+        return [
+            DiTResult(r.rid, x[i], now - r.submitted, self.sampler.num_steps)
+            for i, r in enumerate(batch)
+        ]
+
+    def serve(self) -> list[DiTResult]:
+        out = []
+        while self.queue:
+            out.extend(self.run_once())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# AR decode serving (assigned LM archs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ARRequest:
+    rid: int
+    prompt: jax.Array  # [L_prompt] int32
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class Slot:
+    req: ARRequest | None = None
+    pos: int = 0  # next cache index to write
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+
+class ARServer:
+    """Fixed-slot continuous batching over a sequence-sharded KV cache.
+
+    Prefill is implemented as teacher-forced decode of the prompt (one
+    engine, one cache layout — adequate for the assigned decode shapes;
+    a chunked-prefill path is a straightforward extension).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, mesh, sp: SPConfig,
+                 batch_slots: int = 4, max_len: int = 256,
+                 cache_dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ParallelContext(mesh, sp, "decode")
+        self.bundle = get_model(cfg)
+        self.slots = [Slot() for _ in range(batch_slots)]
+        self.max_len = max_len
+        self.caches = self.bundle.init_caches(cfg, batch_slots, max_len, cache_dtype)
+        self.queue: deque[ARRequest] = deque()
+        self.results: dict[int, list[int]] = {}
+
+        def step(params, caches, tokens, cur_index):
+            batch = {"tokens": tokens}
+            logits, caches = self.bundle.step(params, batch, caches,
+                                              cur_index, cfg, self.ctx)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+        self._step = jax.jit(step)
+
+    def submit(self, req: ARRequest) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in self.slots:
+            if s.req is None and self.queue:
+                s.req = self.queue.popleft()
+                s.pos = 0
+                s.generated = []
+
+    def tick(self) -> None:
+        """Advance every active slot one position.
+
+        All slots share one cur_index per tick in this reference engine;
+        requests are aligned at admission (pos 0).  Slots therefore run in
+        lockstep — the standard static-batching baseline."""
+        self._admit()
+        active = [s for s in self.slots if s.req is not None]
+        if not active:
+            return
+        pos = active[0].pos
+        tokens = []
+        for s in self.slots:
+            if s.req is None:
+                tokens.append(0)
+            elif s.pos < len(s.req.prompt):
+                tokens.append(int(s.req.prompt[s.pos]))
+            else:
+                tokens.append(s.generated[-1] if s.generated else 0)
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        nxt, self.caches = self._step(self.params, self.caches, tok,
+                                      jnp.int32(pos))
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            s.pos += 1
+            if s.pos >= len(s.req.prompt):
+                s.generated.append(int(nxt[i]))
+            if (len(s.generated) >= s.req.max_new_tokens
+                    or s.pos >= self.max_len - 1):
+                self.results[s.req.rid] = list(s.generated)
+                s.req = None
+
+    def serve(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
+        t = 0
+        while (self.queue or any(s.req for s in self.slots)) and t < max_ticks:
+            self.tick()
+            t += 1
+        return self.results

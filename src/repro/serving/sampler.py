@@ -1,0 +1,63 @@
+"""Flow-matching Euler sampler for DiT serving (paper Figure 1 pipeline).
+
+One sampling step = one full DiT forward (velocity prediction) — this is
+the unit the paper benchmarks ("latency of one sampling step").  The
+sampler integrates x_t from t=1 (noise) to t=0 (data) with uniform Euler
+steps; the toy linear VAE decode is the stubbed frontend inverse
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import ParallelContext
+from ..models.dit import LATENT_CHANNELS, dit_forward
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    num_steps: int = 20
+    guidance_scale: float = 1.0  # >1 enables classifier-free guidance
+
+
+def sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
+                x_t: jax.Array, cond: jax.Array, t: jax.Array,
+                dt: jax.Array, sc: SamplerConfig) -> jax.Array:
+    """One Euler step x_{t-dt} = x_t - dt * v(x_t, t)."""
+    b = x_t.shape[0]
+    tt = jnp.full((b,), t, jnp.float32)
+    v = dit_forward(params, cfg, ctx, latents=x_t, cond=cond, timesteps=tt)
+    if sc.guidance_scale != 1.0:
+        v_un = dit_forward(params, cfg, ctx, latents=x_t,
+                           cond=jnp.zeros_like(cond), timesteps=tt)
+        v = v_un + sc.guidance_scale * (v - v_un)
+    return x_t - dt * v.astype(x_t.dtype)
+
+
+def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
+           key: jax.Array, batch: int, seq_len: int, cond: jax.Array,
+           sc: SamplerConfig = SamplerConfig(),
+           step_fn=None) -> jax.Array:
+    """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS]."""
+    x = jax.random.normal(key, (batch, seq_len, LATENT_CHANNELS), cfg.dtype)
+    dt = 1.0 / sc.num_steps
+    fn = step_fn or (lambda x, c, t: sample_step(params, cfg, ctx, x, c, t, dt, sc))
+    for i in range(sc.num_steps):
+        t = 1.0 - i * dt
+        x = fn(x, cond, t)
+    return x
+
+
+def toy_vae_decode(latents: jax.Array, out_channels: int = 3,
+                   patch: int = 2) -> jax.Array:
+    """Stub VAE decoder: fixed linear map latent tokens -> pixel patches.
+    [B, T, C] -> [B, T * patch**2, out_channels]."""
+    b, t, c = latents.shape
+    key = jax.random.PRNGKey(42)  # fixed decoder
+    w = jax.random.normal(key, (c, patch * patch * out_channels), latents.dtype)
+    px = jnp.einsum("btc,cp->btp", latents, w) / (c ** 0.5)
+    return px.reshape(b, t * patch * patch, out_channels)

@@ -1,0 +1,16 @@
+from . import checkpoint
+from .data import SyntheticStream
+from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+from .trainer import Trainer, batch_shardings, make_train_step
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "SyntheticStream",
+    "Trainer",
+    "adamw_update",
+    "batch_shardings",
+    "checkpoint",
+    "init_adamw",
+    "make_train_step",
+]

@@ -1,0 +1,59 @@
+"""Minimal dependency-free checkpointing: pytrees <-> an .npz + JSON treedef.
+
+Handles params, optimizer state, and step counters.  Arrays are pulled to
+host (fully replicated read-back) — fine for the ~100M example runs this
+repo trains; a production deployment would swap in tensorstore behind the
+same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    # bf16 isn't natively storable in npz; view as uint16 with a dtype tag
+    arrays, dtypes = {}, []
+    for i, a in enumerate(leaves):
+        if a.dtype == jnp.bfloat16:
+            arrays[f"a{i}"] = a.view(np.uint16)
+            dtypes.append("bfloat16")
+        else:
+            arrays[f"a{i}"] = a
+            dtypes.append(str(a.dtype))
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef), "n": len(leaves), "dtypes": dtypes}, f)
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    data = np.load(path + ".npz")
+    with open(path + ".tree.json") as f:
+        meta = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert meta["n"] == len(leaves_like), "checkpoint/model structure mismatch"
+    out = []
+    for i, ref in enumerate(leaves_like):
+        a = data[f"a{i}"]
+        if meta["dtypes"][i] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        assert a.shape == ref.shape, (i, a.shape, ref.shape)
+        out.append(jnp.asarray(a))
+    return jax.tree.unflatten(treedef, out)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path + ".npz") and os.path.exists(path + ".tree.json")

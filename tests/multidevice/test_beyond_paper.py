@@ -1,0 +1,45 @@
+"""Beyond-paper optimizations preserve numerics (8 fake devices)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import SPConfig
+from repro.models import ParallelContext, get_model
+from repro.models import lm as lm_mod
+from repro.models.moe import moe_block
+
+
+def test_token_gather_ep_decode_matches_baseline(mesh8, rng):
+    """Gathering tokens instead of FSDP'd expert weights is exact."""
+    cfg = dataclasses.replace(get_reduced("arctic-480b"), dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params, _ = lm_mod.init_lm(cfg, rng, 2)
+    lp = jax.tree.map(lambda x: x[0], params["layers"])
+    x = jax.random.normal(rng, (4, 1, cfg.d_model))
+    sp = SPConfig(strategy="swift", sp_axes=("pod", "model"),
+                  batch_axes=("data",))
+    base = ParallelContext(mesh8, sp, "decode", ep_token_gather=False)
+    tg = ParallelContext(mesh8, sp, "decode", ep_token_gather=True)
+    y0, _ = jax.jit(lambda x: moe_block(x, lp["moe"], cfg, base))(x)
+    y1, _ = jax.jit(lambda x: moe_block(x, lp["moe"], cfg, tg))(x)
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-5)
+
+
+def test_last_only_prefill_matches_full(mesh8, rng):
+    cfg = dataclasses.replace(get_reduced("qwen2-1.5b"), dtype="float32",
+                              sharding_overrides=())
+    bundle = get_model(cfg)
+    params, _ = bundle.init(cfg, rng, 1)
+    tokens = jax.random.randint(rng, (4, 16), 0, cfg.vocab, jnp.int32)
+    sp = SPConfig(strategy="swift_torus", sp_axes=("pod", "model"),
+                  batch_axes=("data",))
+    ctx = ParallelContext(mesh8, sp, "prefill")
+    full = bundle.apply(params, {"tokens": tokens}, cfg, ctx)
+    last = bundle.apply(params, {"tokens": tokens}, cfg, ctx, last_only=True)
+    assert last.shape == (4, 1, cfg.vocab)
+    np.testing.assert_allclose(last[:, 0], full[:, -1], rtol=1e-5, atol=1e-5)

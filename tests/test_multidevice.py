@@ -1,0 +1,28 @@
+"""Runs the multi-device SP suite in ONE subprocess with 8 fake devices.
+
+The outer pytest run keeps 1 device (assignment requirement); the inner
+run sets XLA_FLAGS before jax initializes.  pyproject excludes
+tests/multidevice from outer collection.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.timeout(1800)
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest",
+         os.path.join(HERE, "multidevice"), "-q", "-p", "no:cacheprovider"],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if proc.returncode != 0:
+        tail = "\n".join((proc.stdout + proc.stderr).splitlines()[-60:])
+        pytest.fail(f"inner multidevice suite failed:\n{tail}")

@@ -1,0 +1,63 @@
+"""Planner (§4.2) invariants + paper examples."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan, usp_plan
+
+
+@given(
+    st.sampled_from([1, 2, 4, 8]),
+    st.sampled_from([1, 2, 4, 8, 16]),
+    st.integers(1, 128),
+)
+@settings(max_examples=200, deadline=None)
+def test_plan_invariants(n, m, heads):
+    p = plan(n, m, heads)
+    assert p.p_ulysses * p.p_ring == n * m
+    assert heads % p.p_ulysses == 0  # Ulysses degree divides heads
+    assert p.p_ulysses == math.gcd(n * m, heads)  # maximal (paper's choice)
+
+
+@given(
+    st.sampled_from([2, 4]), st.sampled_from([2, 4, 8]),
+    st.integers(1, 64), st.integers(1, 8),
+)
+@settings(max_examples=200, deadline=None)
+def test_gqa_constrains_ulysses(n, m, hq_mult, hkv):
+    hq = hkv * hq_mult
+    p = plan(n, m, hq, hkv)
+    assert hkv % p.p_ulysses == 0  # never forces KV-head replication
+    p2 = plan(n, m, hq, hkv, replicate_kv=True)
+    assert p2.p_ulysses >= p.p_ulysses
+
+
+def test_paper_simple_case():
+    """H = N: Ulysses spans exactly the machines (paper §4.2)."""
+    p = plan(4, 8, 4 * 8)
+    assert p.p_ulysses == 32  # gcd(32, 32)
+    p = plan(4, 8, 4)
+    assert p.p_ulysses == 4 and p.p_ring == 8
+    assert p.ulysses_inter
+
+
+def test_usp_same_factorisation_different_boundary():
+    a = plan(4, 8, 24)
+    b = usp_plan(4, 8, 24)
+    assert (a.p_ulysses, a.p_ring) == (b.p_ulysses, b.p_ring)
+    assert a.ulysses_inter and not b.ulysses_inter
+
+
+def test_assigned_arch_head_counts():
+    """The planner handles every assigned arch's head geometry on the
+    production SP group (N=2 pods × M=16)."""
+    cases = {  # (Hq, Hkv)
+        "qwen2-1.5b": (12, 2), "qwen2-vl-2b": (12, 2), "stablelm-3b": (32, 32),
+        "whisper-tiny": (6, 6), "hymba-1.5b": (25, 5), "arctic-480b": (56, 8),
+        "chatglm3-6b": (32, 2), "starcoder2-7b": (36, 4),
+        "qwen2-moe-a2.7b": (16, 16),
+    }
+    for arch, (hq, hkv) in cases.items():
+        p = plan(2, 16, hq, hkv)
+        assert p.p_ulysses * p.p_ring == 32, arch
+        assert math.gcd(hq, hkv) % p.p_ulysses == 0, arch

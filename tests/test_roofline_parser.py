@@ -1,0 +1,48 @@
+"""HLO collective parser used by the roofline analysis."""
+from repro.launch import roofline as rl
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %cp = bf16[128,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %ag = f32[512,256]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(%ag), replica_groups={{0,1},{2,3}}, to_apply=add
+  %a2a = bf16[4,32,256]{2,1,0} all-to-all(%p0), replica_groups={{0,1,2,3}}
+  %cps = (bf16[128,256]{1,0}, bf16[128,256]{1,0}) collective-permute-start(%p0), source_target_pairs={{0,256},{256,0}}
+  %cpd = bf16[128,256]{1,0} collective-permute-done(%cps)
+}
+"""
+
+
+def test_parse_collective_bytes():
+    stats = rl.parse_collectives(HLO, pod_size=256)
+    cp = 128 * 256 * 2
+    ag = 512 * 256 * 4
+    ar = 128 * 256 * 4 * 2  # all-reduce counted twice (RS + AG)
+    a2a = 4 * 32 * 256 * 2
+    cps = 128 * 256 * 2
+    assert stats.bytes_total == cp + ag + ar + a2a + cps
+
+
+def test_inter_pod_classification():
+    stats = rl.parse_collectives(HLO, pod_size=256)
+    # only the -start op has a pair crossing rank 256
+    assert stats.bytes_inter_pod == 128 * 256 * 2
+    stats2 = rl.parse_collectives(HLO, pod_size=2)
+    assert stats2.bytes_inter_pod > stats.bytes_inter_pod
+
+
+def test_analyze_terms_and_bottleneck():
+    r = rl.analyze_from_terms(flops=1e12, byts=1e9, coll_bytes=1e9,
+                              coll_inter=0, chips=256, model_flops=2e14)
+    assert r.bottleneck == "collective"  # 1e9/50e9 > 1e12/197e12 > 1e9/819e9
+    assert abs(r.t_compute - 1e12 / rl.PEAK_FLOPS) < 1e-12
+    assert 0 < r.useful_ratio < 1
+
+
+def test_done_ops_not_double_counted():
+    stats = rl.parse_collectives(HLO, pod_size=1 << 30)
+    # collective-permute-done must not add bytes (its -start already did)
+    assert stats.counts.get("collective-permute/intra", 0) == 2

@@ -1,0 +1,110 @@
+"""RoPE variants + GroupLayout permutation invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.collectives import GroupLayout
+from repro.models.blocks import apply_rope, sinusoidal_embedding
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _qk(key, b=2, l=16, h=4, d=32):
+    kq, kk = jax.random.split(key)
+    return (jax.random.normal(kq, (b, l, h, d)),
+            jax.random.normal(kk, (b, l, h, d)))
+
+
+@pytest.mark.parametrize("variant,pct", [("rope", 1.0), ("rope", 0.25),
+                                         ("rope2d", 1.0)])
+def test_rope_preserves_norm(variant, pct, rng):
+    q, k = _qk(rng)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    q2, k2 = apply_rope(q, k, pos, variant=variant, theta=1e4, rope_pct=pct)
+    np.testing.assert_allclose(jnp.linalg.norm(q2, axis=-1),
+                               jnp.linalg.norm(q, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property(rng):
+    """<rope(q,i), rope(k,j)> depends only on i - j (full rotary)."""
+    q, k = _qk(rng, b=1, l=1)
+    def dot_at(i, j):
+        pi = jnp.full((1, 1), i)
+        pj = jnp.full((1, 1), j)
+        qi, _ = apply_rope(q, q, pi, variant="rope", theta=1e4)
+        kj, _ = apply_rope(k, k, pj, variant="rope", theta=1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-5  # actually position-dep.
+
+
+def test_mrope_components_differ(rng):
+    """Different (t, h, w) position triples rotate differently."""
+    q, k = _qk(rng, b=1, l=4)
+    p1 = jnp.stack([jnp.zeros((1, 4), jnp.int32),
+                    jnp.arange(4)[None], jnp.arange(4)[None]])
+    p2 = jnp.stack([jnp.arange(4)[None], jnp.zeros((1, 4), jnp.int32),
+                    jnp.arange(4)[None]])
+    q1, _ = apply_rope(q, k, p1, variant="mrope", theta=1e4)
+    q2, _ = apply_rope(q, k, p2, variant="mrope", theta=1e4)
+    assert float(jnp.max(jnp.abs(q1 - q2))) > 1e-4
+
+
+def test_sinusoidal_table():
+    t = sinusoidal_embedding(32, 64)
+    assert t.shape == (32, 64)
+    assert float(jnp.max(jnp.abs(t))) <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# GroupLayout (pure python invariants)
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 2, 4, 8]),
+       st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_layout_coords_roundtrip(pu, pr, outer):
+    lay = GroupLayout(("x",), pu, pr, ulysses_outer=outer)
+    seen = set()
+    for p in range(lay.size):
+        u, r = lay.coords(p)
+        assert 0 <= u < pu and 0 <= r < pr
+        assert lay.rank(u, r) == p
+        seen.add((u, r))
+    assert len(seen) == lay.size
+
+
+@given(st.sampled_from([2, 4, 8]), st.sampled_from([2, 4]), st.booleans(),
+       st.integers(1, 7))
+@settings(max_examples=100, deadline=None)
+def test_ulysses_stage_perm_is_permutation(pu, pr, outer, k):
+    lay = GroupLayout(("x",), pu, pr, ulysses_outer=outer)
+    perm = lay.ulysses_stage_perm(k % pu if k % pu else 1)
+    srcs = [a for a, _ in perm]
+    dsts = [b for _, b in perm]
+    assert sorted(srcs) == list(range(lay.size))
+    assert sorted(dsts) == list(range(lay.size))
+    # stage permutes stay within the ulysses group (same ring coord)
+    for a, b in perm:
+        assert lay.coords(a)[1] == lay.coords(b)[1]
+
+
+@given(st.sampled_from([2, 4, 8]), st.sampled_from([2, 4]), st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_ring_perm_cycles_within_group(pu, pr, outer):
+    lay = GroupLayout(("x",), pu, pr, ulysses_outer=outer)
+    perm = dict(lay.ring_perm(1))
+    for start in range(lay.size):
+        u0 = lay.coords(start)[0]
+        cur, steps = start, 0
+        while True:
+            cur = perm[cur]
+            steps += 1
+            assert lay.coords(cur)[0] == u0  # never leaves the ring group
+            if cur == start:
+                break
+        assert steps == pr  # full cycle covers the ring group exactly

@@ -1,0 +1,74 @@
+"""Sharding-rule validity for every assigned arch WITHOUT compiling:
+each param dim mapped to mesh axes must be divisible by their product,
+for both serve and train rules, on both production mesh shapes.
+"""
+import math
+
+import jax
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import get_model
+from repro.models.sharding import _spec_of, rules_for
+
+MESHES = {
+    "pod": {"data": 16, "model": 16},
+    "multipod": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _abstract_params(cfg, ep):
+    bundle = get_model(cfg)
+    captured = {}
+
+    def f(key):
+        params, axes = bundle.init(cfg, key, ep)
+        captured["axes"] = axes
+        return params
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, captured["axes"]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("mesh_name", ["pod", "multipod"])
+@pytest.mark.parametrize("mode", ["serve", "train"])
+def test_param_dims_divisible(arch, mesh_name, mode):
+    cfg = get_config(arch)
+    mesh = FakeMesh(MESHES[mesh_name])
+    sds, axes = _abstract_params(cfg, mesh.shape["model"])
+    rules = rules_for(cfg, mode)
+
+    leaves_s = jax.tree.leaves(sds)
+    leaves_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(leaves_s) == len(leaves_a)
+    for s, logical in zip(leaves_s, leaves_a):
+        spec = _spec_of(logical, rules, mesh)
+        for dim, entry in zip(s.shape, spec):
+            if entry is None:
+                continue
+            axes_ = (entry,) if isinstance(entry, str) else entry
+            k = math.prod(mesh.shape[a] for a in axes_)
+            assert dim % k == 0, (arch, mode, mesh_name, logical, s.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_axes_tree_mirrors_params(arch):
+    """ParamBuilder guarantees the axes tree matches the params tree."""
+    cfg = get_config(arch)
+    sds, axes = _abstract_params(cfg, 16)
+    s_paths = [p for p, _ in jax.tree_util.tree_leaves_with_path(sds)]
+    a_paths = [p for p, _ in jax.tree_util.tree_leaves_with_path(
+        axes, is_leaf=lambda x: isinstance(x, tuple))]
+    assert s_paths == a_paths
+    for (_, s), (_, a) in zip(
+            jax.tree_util.tree_leaves_with_path(sds),
+            jax.tree_util.tree_leaves_with_path(
+                axes, is_leaf=lambda x: isinstance(x, tuple))):
+        assert len(s.shape) == len(a), (s.shape, a)

@@ -1,0 +1,94 @@
+"""Property tests for the online-softmax merge algebra (paper Appendix C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MaskSpec, Partial, attend_partial, empty_partial, finalize, merge
+from repro.core.softmax import attend_chunked, reference_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_partial(seed, b=1, lq=4, hq=2, d=8):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return Partial(
+        o=jax.random.normal(k1, (b, lq, hq, d)),
+        l=jax.nn.softplus(jax.random.normal(k2, (b, hq, lq))),
+        m=jax.random.normal(k3, (b, hq, lq)) * 3.0,
+    )
+
+
+@given(st.integers(0, 10_000), st.integers(0, 10_000), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_merge_associative(s1, s2, s3):
+    a, b, c = _rand_partial(s1), _rand_partial(s2), _rand_partial(s3)
+    left = merge(merge(a, b), c)
+    right = merge(a, merge(b, c))
+    np.testing.assert_allclose(finalize(left), finalize(right), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_merge_commutative(s1, s2):
+    a, b = _rand_partial(s1), _rand_partial(s2)
+    np.testing.assert_allclose(
+        finalize(merge(a, b)), finalize(merge(b, a)), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_merge_identity(seed):
+    a = _rand_partial(seed)
+    e = empty_partial(*a.o.shape)
+    out = merge(a, e)
+    np.testing.assert_allclose(finalize(out), finalize(a), rtol=1e-6)
+    out = merge(e, a)
+    np.testing.assert_allclose(finalize(out), finalize(a), rtol=1e-6)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("window", [None, 10])
+@pytest.mark.parametrize("n_chunks", [1, 2, 4])
+def test_chunked_equals_full(causal, window, n_chunks):
+    key = jax.random.PRNGKey(0)
+    b, l, hq, hkv, d = 2, 32, 4, 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, l, hq, d))
+    k = jax.random.normal(kk, (b, l, hkv, d))
+    v = jax.random.normal(kv, (b, l, hkv, d))
+    ref = reference_attention(q, k, v, mask=MaskSpec(causal=causal, window=window))
+    cs = l // n_chunks
+    chunks = [(k[:, i * cs:(i + 1) * cs], v[:, i * cs:(i + 1) * cs], i * cs)
+              for i in range(n_chunks)]
+    out = finalize(attend_chunked(q, chunks, causal=causal, window=window))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_order_invariance():
+    key = jax.random.PRNGKey(1)
+    b, l, h, d = 1, 24, 2, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, l, h, d))
+    k = jax.random.normal(kk, (b, l, h, d))
+    v = jax.random.normal(kv, (b, l, h, d))
+    cs = 8
+    chunks = [(k[:, i:i + cs], v[:, i:i + cs], i) for i in range(0, l, cs)]
+    a = finalize(attend_chunked(q, chunks, causal=True))
+    bb = finalize(attend_chunked(q, chunks[::-1], causal=True))
+    np.testing.assert_allclose(a, bb, rtol=1e-5, atol=1e-5)
+
+
+def test_fully_masked_rows_are_zero():
+    """First token with window/causal edge: rows with zero valid keys."""
+    q = jnp.ones((1, 4, 1, 8))
+    k = jnp.ones((1, 4, 1, 8))
+    v = jnp.ones((1, 4, 1, 8))
+    # k chunk strictly in the future of all q
+    p = attend_partial(q, k, v, mask=MaskSpec(causal=True, q_offset=0, k_offset=100))
+    out = finalize(p)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(out, 0.0)

@@ -1,0 +1,111 @@
+"""Chunked linear-recurrence scans vs naive sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm
+
+B, H, N, P_ = 2, 3, 8, 5
+
+
+def naive_rwkv(r, k, v, w, u, S0=None):
+    L = r.shape[1]
+    S = np.zeros((B, H, N, N)) if S0 is None else np.asarray(S0, np.float64).copy()
+    out = np.zeros((B, L, H, N))
+    r, k, v, w, u = (np.asarray(t, np.float64) for t in (r, k, v, w, u))
+    for t in range(L):
+        kv = k[:, t][..., :, None] * v[:, t][..., None, :]
+        out[:, t] = np.einsum("bhn,bhnm->bhm", r[:, t],
+                              S + u[None, :, :, None] * kv)
+        S = w[:, t][..., None] * S + kv
+    return out, S
+
+
+def naive_ssd(x, dt, Bm, Cm, a, S0=None):
+    L = x.shape[1]
+    S = np.zeros((B, H, P_, N)) if S0 is None else np.asarray(S0, np.float64).copy()
+    out = np.zeros((B, L, H, P_))
+    x, dt, Bm, Cm, a = (np.asarray(t, np.float64) for t in (x, dt, Bm, Cm, a))
+    for t in range(L):
+        g = np.exp(dt[:, t] * a[None])
+        S = g[..., None, None] * S + np.einsum(
+            "bhp,bhn->bhpn", x[:, t] * dt[:, t][..., None], Bm[:, t])
+        out[:, t] = np.einsum("bhpn,bhn->bhp", S, Cm[:, t])
+    return out, S
+
+
+def _rwkv_inputs(seed, L):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (B, L, H, N))
+    k = jax.random.normal(ks[1], (B, L, H, N))
+    v = jax.random.normal(ks[2], (B, L, H, N))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, L, H, N))) * 0.5 + 0.5
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    return r, k, v, w, u
+
+
+@given(st.integers(0, 1000), st.sampled_from([16, 32, 64]),
+       st.sampled_from([8, 16, 64]))
+@settings(max_examples=12, deadline=None)
+def test_rwkv_chunk_scan_matches_naive(seed, L, chunk):
+    r, k, v, w, u = _rwkv_inputs(seed, L)
+    res = ssm.rwkv6_chunk_scan(r, k, v, w, u, chunk=chunk)
+    out, S = naive_rwkv(r, k, v, w, u)
+    np.testing.assert_allclose(res.out, out, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(res.s_out, S, rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_influence_matches_nonzero_state():
+    r, k, v, w, u = _rwkv_inputs(7, 32)
+    S0 = jax.random.normal(jax.random.PRNGKey(9), (B, H, N, N)) * 0.3
+    res = ssm.rwkv6_chunk_scan(r, k, v, w, u, chunk=16)
+    got = ssm.rwkv6_apply_influence(res.out, res.infl, S0)
+    want, _ = naive_rwkv(r, k, v, w, u, S0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 1000), st.sampled_from([16, 64]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_scan_matches_naive(seed, L):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P_))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bm = jax.random.normal(ks[2], (B, L, H, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, L, H, N)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    res = ssm.ssd_chunk_scan(x, dt, Bm, Cm, a, chunk=16)
+    out, S = naive_ssd(x, dt, Bm, Cm, a)
+    np.testing.assert_allclose(res.out, out, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(res.s_out, S, rtol=1e-4, atol=1e-4)
+    # influence with nonzero initial state
+    S0 = jax.random.normal(ks[0], (B, H, P_, N)) * 0.3
+    got = ssm.ssd_apply_influence(res.out, res.infl, S0)
+    want, _ = naive_ssd(x, dt, Bm, Cm, a, S0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_decode_step_matches_naive():
+    r, k, v, w, u = _rwkv_inputs(11, 8)
+    S = np.zeros((B, H, N, N))
+    out_ref, _ = naive_rwkv(r, k, v, w, u)
+    s = jnp.zeros((B, H, N, N))
+    for t in range(8):
+        o, s = ssm.rwkv6_decode_step(r[:, t], k[:, t], v[:, t], w[:, t], u, s)
+        np.testing.assert_allclose(o, out_ref[:, t], rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_step_matches_naive():
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    L = 8
+    x = jax.random.normal(ks[0], (B, L, H, P_))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bm = jax.random.normal(ks[2], (B, L, H, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, L, H, N)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    ref, _ = naive_ssd(x, dt, Bm, Cm, a)
+    s = jnp.zeros((B, H, P_, N))
+    for t in range(L):
+        o, s = ssm.ssd_decode_step(x[:, t], dt[:, t], Bm[:, t], Cm[:, t], a, s)
+        np.testing.assert_allclose(o, ref[:, t], rtol=1e-4, atol=1e-4)
