@@ -6,8 +6,14 @@ geometries.  Volumes in MiB (bf16), derived column = V_USP / V_SFU.
 """
 from __future__ import annotations
 
-from repro.core import plan, usp_plan
-from repro.core.comm_model import LayerWorkload, swift_inter_volume, usp_inter_volume
+from repro.core import plan, plan_hybrid, usp_plan
+from repro.core.comm_model import (
+    LayerWorkload,
+    cfg_recombine_volume,
+    pipefusion_boundary_volume,
+    swift_inter_volume,
+    usp_inter_volume,
+)
 
 from .common import row
 
@@ -16,6 +22,7 @@ WORKLOADS = {
     "cogvideox_20s": LayerWorkload(batch=1, seq=49_152, heads=24, head_dim=64),
 }
 M_PER_MACHINE = 8  # paper testbed: 8 GPUs per machine
+N_LAYERS = {"flux_3072": 96, "cogvideox_20s": 42}
 
 
 def run() -> list[str]:
@@ -31,4 +38,20 @@ def run() -> list[str]:
                             f"Pu={up.p_ulysses},Pr={up.p_ring}"))
             rows.append(row(f"comm_volume/{wname}/N{n}/sfu_MiB", v_s,
                             f"usp_over_sfu={ratio:.2f}x"))
+        # hybrid (DESIGN.md §7): per-STEP inter-machine volume.  SP pays its
+        # per-layer volume n_layers times (×2 for sequential guidance);
+        # pipelining pays one boundary hand-off and CFG one recombine.
+        n, nl = 4, N_LAYERS[wname]
+        sp = plan(n, M_PER_MACHINE, wl.heads)
+        v_sp_step = swift_inter_volume(sp, wl.blhd) * 2 * nl * 2 / 2**20
+        h = plan_hybrid(n, M_PER_MACHINE, wl.heads, cfg_parallel=True, pp=2,
+                        n_layers=nl)
+        v_h_step = (swift_inter_volume(h.sp, wl.blhd) * (nl / h.pp)
+                    + pipefusion_boundary_volume(wl, h.pp)
+                    + cfg_recombine_volume(wl)) * 2 / 2**20
+        rows.append(row(f"comm_volume/{wname}/N{n}/sfu_step_MiB", v_sp_step,
+                        f"per-step, guided, layers={nl}"))
+        rows.append(row(f"comm_volume/{wname}/N{n}/hybrid_step_MiB", v_h_step,
+                        f"cfg={h.cfg},pp={h.pp},"
+                        f"sfu_over_hybrid={v_sp_step / v_h_step:.1f}x"))
     return rows

@@ -1,0 +1,67 @@
+"""Hybrid-parallel sweep (beyond-paper; DESIGN.md §7): predicted per-step
+serving latency of swift_torus SP alone vs + cfg parallelism vs + patch
+pipelining, at EQUAL device count, from the analytical model.
+
+Guided sampling (CFG) is on for every row — that is the serving scenario
+the hybrid axes exist for.  All plans spend the same total FLOPs per step;
+the hybrid plans win by (a) halving the sequential-guidance factor with
+one velocity-sized recombine and (b) replacing per-layer inter-machine SP
+collectives with one activation hand-off per stage boundary per step.
+
+The win is regime-dependent and the sweep shows both sides honestly: at
+the paper's longest sequences attention compute dominates and Torus hides
+the inter-machine traffic anyway (hybrid ≈ SP-only, minus the pipeline
+bubble); at medium resolutions — the latency-critical serving bucket —
+per-layer comm exposure dominates SP-only and the hybrid plan, whose SP
+sub-mesh never leaves the machine, wins by multiples.
+
+Rows: ``hybrid_sweep/<wl>/N<n>/<plan>`` with us = predicted step latency
+and derived = speedup over the SP-only plan (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from repro.core import plan, plan_hybrid
+from repro.core.comm_model import (
+    LayerWorkload,
+    hybrid_step_latency,
+    sp_step_latency,
+)
+
+from .common import row
+
+# (workload, DiT depth): the paper's two geometries at several latent
+# resolutions — seq scales ~ pixels, so 1024px ≈ 4k tokens for Flux.
+WORKLOADS = {
+    "flux_1024": (LayerWorkload(batch=1, seq=4_096, heads=24, head_dim=128), 96),
+    "flux_2048": (LayerWorkload(batch=1, seq=16_384, heads=24, head_dim=128), 96),
+    "flux_3072": (LayerWorkload(batch=1, seq=36_864, heads=24, head_dim=128), 96),
+    "cogvideox_5s": (LayerWorkload(batch=1, seq=12_288, heads=24, head_dim=64), 42),
+    "cogvideox_20s": (LayerWorkload(batch=1, seq=49_152, heads=24, head_dim=64), 42),
+}
+M_PER_MACHINE = 8  # paper testbed: 8 GPUs per machine
+
+
+def run() -> list[str]:
+    rows = []
+    for wname, (wl, n_layers) in WORKLOADS.items():
+        for n in (2, 4):
+            sp_only = plan(n, M_PER_MACHINE, wl.heads)
+            base = sp_step_latency(sp_only, wl, n_layers=n_layers,
+                                   guided=True)["t_step"]
+            rows.append(row(f"hybrid_sweep/{wname}/N{n}/sp_only",
+                            base * 1e6,
+                            f"Pu={sp_only.p_ulysses},Pr={sp_only.p_ring}"))
+            plans = {
+                "cfg": dict(cfg_parallel=True, pp=1),
+                "cfg_pp2": dict(cfg_parallel=True, pp=2),
+            }
+            for pname, kw in plans.items():
+                h = plan_hybrid(n, M_PER_MACHINE, wl.heads,
+                                n_layers=n_layers, **kw)
+                t = hybrid_step_latency(h, wl, n_layers=n_layers,
+                                        guided=True)["t_step"]
+                rows.append(row(
+                    f"hybrid_sweep/{wname}/N{n}/{pname}", t * 1e6,
+                    f"cfg={h.cfg},pp={h.pp},Pu={h.sp.p_ulysses},"
+                    f"Pr={h.sp.p_ring},speedup={base / t:.2f}x"))
+    return rows

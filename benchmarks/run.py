@@ -16,6 +16,7 @@ def main() -> None:
         comm_volume,
         config_sweep,
         e2e_latency,
+        hybrid_sweep,
         kernel_bench,
         layerwise,
         roofline_table,
@@ -29,6 +30,7 @@ def main() -> None:
         "ablation (Fig 10)": ablation,
         "kernel_bench (Fig 12)": kernel_bench,
         "roofline_table (assignment)": roofline_table,
+        "hybrid_sweep (beyond-paper, DESIGN.md §7)": hybrid_sweep,
     }
     print("name,us_per_call,derived")
     ok = True

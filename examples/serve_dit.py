@@ -1,6 +1,8 @@
-"""Serve a small DiT with batched requests through the SwiftFusion engine —
-the paper's own scenario (Figure 1): requests -> batched flow-matching
-sampling -> latents -> toy VAE decode.
+"""Serve a small DiT through the hybrid-parallel engine — the paper's
+scenario (Figure 1) plus the beyond-paper hybrid axes (DESIGN.md §7):
+requests -> batched flow-matching sampling with swift_torus SP composed
+with CFG parallelism and displaced patch pipelining -> latents -> toy VAE
+decode.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_dit.py
@@ -17,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_reduced
-from repro.core import SPConfig
+from repro.core import PipelineConfig, SPConfig, plan_hybrid
+from repro.launch.mesh import make_hybrid_mesh
 from repro.models import get_model
 from repro.serving import DiTRequest, DiTServer, SamplerConfig, toy_vae_decode
 
@@ -27,13 +30,25 @@ def main():
                               d_model=256, n_heads=8, n_kv_heads=8,
                               head_dim=32, d_ff=512, dtype="float32")
     bundle = get_model(cfg)
-    params, _ = bundle.init(cfg, jax.random.PRNGKey(0), 1)
+    params, axes = bundle.init(cfg, jax.random.PRNGKey(0), 1)
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    sp = SPConfig(strategy="swift_torus", sp_axes=("pod", "model"),
-                  batch_axes=("data",))
+    # hybrid mesh over the 8 host devices: 2-way CFG x 2 pipeline stages x
+    # 2-way swift_torus SP — the planner picks the same shape for a real
+    # N x M cluster (cfg and pp consume the slow boundary first).
+    h = plan_hybrid(4, 2, cfg.n_heads, cfg.n_kv_heads, cfg_parallel=True,
+                    pp=2, n_layers=cfg.n_layers)
+    print(f"hybrid plan: cfg={h.cfg} pp={h.pp} "
+          f"P_u={h.sp.p_ulysses} P_r={h.sp.p_ring}  "
+          f"({h.total_devices} devices)")
+    mesh = make_hybrid_mesh(cfg=h.cfg, pipe=h.pp, data=1,
+                            model=h.sp.sp_degree)
+    sp = SPConfig(strategy="swift_torus", sp_axes=("model",),
+                  batch_axes=("data",), cfg_axis="cfg", pp_axis="pipe")
     srv = DiTServer(params, cfg, mesh, sp,
-                    sampler=SamplerConfig(num_steps=4), max_batch=2)
+                    sampler=SamplerConfig(
+                        num_steps=4, guidance_scale=5.0, cfg_parallel=True,
+                        pipeline=PipelineConfig(pp=2, warmup_steps=1)),
+                    max_batch=2, param_axes=axes)
 
     # a mixed queue: two "image" sizes (latent sequence lengths)
     for i in range(5):
@@ -45,8 +60,8 @@ def main():
               f"pixels {tuple(px.shape)}  "
               f"latency {r.latency * 1e3:.1f} ms  finite="
               f"{bool(jnp.all(jnp.isfinite(r.latents)))}")
-    print(f"\nserved {len(results)} requests with swift_torus SP over "
-          f"{mesh.devices.size} devices")
+    print(f"\nserved {len(results)} requests with swift_torus SP x "
+          f"cfg_parallel x pp={h.pp} over {mesh.devices.size} devices")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Fail if src/ cites a DESIGN.md / EXPERIMENTS.md section that does not
+exist (run by CI; see ISSUE acceptance: zero dangling doc references).
+
+Checked reference forms:
+    DESIGN.md §<N>        -> DESIGN.md must contain a "## §<N>" heading
+    EXPERIMENTS.md §<Tag> -> EXPERIMENTS.md must contain "## §<Tag>"
+    bare "DESIGN.md" / "EXPERIMENTS.md" mentions -> the file must exist
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REF_RE = re.compile(r"(DESIGN|EXPERIMENTS)\.md(?:\s*§(\w+))?")
+HEAD_RE = re.compile(r"^##\s*§(\w+)", re.MULTILINE)
+
+
+def sections(doc: pathlib.Path) -> set[str]:
+    if not doc.exists():
+        return set()
+    return set(HEAD_RE.findall(doc.read_text()))
+
+
+def main() -> int:
+    have = {name: sections(ROOT / f"{name}.md")
+            for name in ("DESIGN", "EXPERIMENTS")}
+    errors = []
+    for py in sorted((ROOT / "src").rglob("*.py")) + sorted(
+            (ROOT / "benchmarks").rglob("*.py")):
+        text = py.read_text()
+        for m in REF_RE.finditer(text):
+            name, sec = m.group(1), m.group(2)
+            line = text[: m.start()].count("\n") + 1
+            if not (ROOT / f"{name}.md").exists():
+                errors.append(f"{py.relative_to(ROOT)}:{line}: "
+                              f"cites missing file {name}.md")
+            elif sec is not None and sec not in have[name]:
+                errors.append(
+                    f"{py.relative_to(ROOT)}:{line}: cites {name}.md §{sec} "
+                    f"but {name}.md has no '## §{sec}' heading "
+                    f"(has: {sorted(have[name])})")
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} dangling doc reference(s)")
+        return 1
+    print("doc references OK "
+          f"(DESIGN: §{sorted(have['DESIGN'])}, "
+          f"EXPERIMENTS: §{sorted(have['EXPERIMENTS'])})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

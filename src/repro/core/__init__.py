@@ -5,10 +5,13 @@ Public API:
   decode_attention            — distributed decode over sharded KV cache
   reference_attention         — single-device oracle
   plan / SPPlan               — the paper's §4.2 topology planner
-  comm_model                  — Appendix-D analytical volumes
+  plan_hybrid / HybridPlan    — (cfg, pp, P_u, P_r) hybrid planner (DESIGN.md §7)
+  PipelineConfig / KVState    — displaced patch pipelining (PipeFusion)
+  comm_model                  — Appendix-D analytical volumes + hybrid latency
 """
 from .decode import decode_attention
-from .planner import SPPlan, plan, usp_plan
+from .pipefusion import KVState, PipelineConfig
+from .planner import HybridPlan, SPPlan, plan, plan_hybrid, usp_plan
 from .softmax import (
     MaskSpec,
     Partial,
@@ -21,11 +24,15 @@ from .softmax import (
 from .strategy import STRATEGIES, SPConfig, resolve_layout, sp_attention
 
 __all__ = [
+    "HybridPlan",
+    "KVState",
     "MaskSpec",
     "Partial",
+    "PipelineConfig",
     "SPConfig",
     "SPPlan",
     "STRATEGIES",
+    "plan_hybrid",
     "attend_partial",
     "decode_attention",
     "empty_partial",

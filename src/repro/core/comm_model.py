@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .planner import SPPlan
+from .planner import HybridPlan, SPPlan
 
 
 def usp_inter_volume(plan: SPPlan, blhd: float) -> float:
@@ -139,4 +139,117 @@ def attention_layer_latency(
         "t_total": total,
         "inter_elems": inter_v,
         "intra_elems": intra_v,
+    }
+
+
+# ---------------------------------------------------------------------------
+# hybrid parallelism (DESIGN.md §7): CFG + patch pipeline composed with SP
+# ---------------------------------------------------------------------------
+
+LATENT_CHANNELS = 64  # mirrors models/dit.py (velocity tensor channel dim)
+
+
+def cfg_recombine_volume(wl: LayerWorkload) -> float:
+    """Elements each device exchanges for the CFG recombine, per sampler
+    step: half the guided velocity tensor (B·L·C with B the per-branch
+    batch).  This is the ONLY cross-branch traffic of cfg parallelism —
+    it is per *step*, not per layer, which is why the planner spends the
+    slow boundary on it first."""
+    return float(wl.batch * wl.seq * LATENT_CHANNELS)
+
+
+def pipefusion_boundary_volume(wl: LayerWorkload, pp: int) -> float:
+    """Elements each pipeline stage hands to its successor per sampler
+    step: every patch's activations cross each stage boundary once, so the
+    per-device total is B·L·hidden (hidden ≈ H·D) per step — independent
+    of both layer count and patch count.  Compare with SP, which moves
+    O(B·L·H·D) *per layer*."""
+    if pp <= 1:
+        return 0.0
+    return float(wl.batch * wl.seq * wl.heads * wl.head_dim)
+
+
+def sp_step_latency(
+    plan: SPPlan,
+    wl: LayerWorkload,
+    net: NetworkModel = NetworkModel(),
+    *,
+    n_layers: int,
+    guided: bool = True,
+    swift: bool = True,
+) -> dict[str, float]:
+    """Predicted per-sampler-step latency of pure SP serving: ``n_layers``
+    distributed attention layers (Torus overlap + one-sided sync), twice
+    when classifier-free guidance runs its two branches sequentially."""
+    lat = attention_layer_latency(
+        plan, wl, net, swift=swift, overlap_inter=True, one_sided=True)
+    branches = 2 if guided else 1
+    return {
+        "t_step": branches * n_layers * lat["t_total"],
+        "t_layer": lat["t_total"],
+        "branches": float(branches),
+        "inter_elems_step": branches * n_layers * lat["inter_elems"],
+    }
+
+
+def hybrid_step_latency(
+    hplan: HybridPlan,
+    wl: LayerWorkload,
+    net: NetworkModel = NetworkModel(),
+    *,
+    n_layers: int,
+    guided: bool = True,
+    num_patches: int | None = None,
+    num_steps: int = 20,
+    overlap_pp: bool = True,
+) -> dict[str, float]:
+    """Predicted per-sampler-step latency of the (cfg, pp, P_u, P_r) plan.
+
+    Model: each pipeline stage runs n_layers/pp SP-distributed attention
+    layers over the full sequence's worth of patches (patch attention is
+    Q_patch × KV_full, so per-stage flops equal n_layers/pp full layers);
+    cfg = 2 removes the sequential-guidance doubling at the cost of one
+    velocity-sized recombine per step; stage hand-offs stream one patch at
+    a time and overlap with compute (the NVSHMEM-style async schedule —
+    ``overlap_pp=False`` models a blocking hand-off).  The pipeline fill
+    bubble is amortised across the sampler's ``num_steps`` (PipeFusion
+    pipelines across diffusion steps).
+
+    The SP sub-plan keeps the paper's TAS/Torus placement on the residual
+    sub-mesh; when that sub-mesh has one machine the swift/USP distinction
+    is moot for inter traffic and the Ulysses a2a is accounted as
+    intra-machine (swift=False branch of ``intra_volume``).
+    """
+    np_ = num_patches or max(hplan.pp, 1)
+    sub = hplan.sp
+    lat = attention_layer_latency(
+        sub, wl, net, swift=sub.n_machines > 1,
+        overlap_inter=True, one_sided=True)
+    branches = 2 if (guided and hplan.cfg == 1) else 1
+    t_layers = branches * (n_layers / hplan.pp) * lat["t_total"]
+
+    b = net.bytes_per_elem
+    pp_bw = net.inter_bw if hplan.pp_inter else net.intra_bw
+    t_pp = pipefusion_boundary_volume(wl, hplan.pp) * b / pp_bw
+    exposed_pp = max(0.0, t_pp - t_layers) if overlap_pp else t_pp
+    cfg_bw = net.inter_bw if hplan.cfg_inter else net.intra_bw
+    t_cfg = 0.0
+    if guided and hplan.cfg == 2:
+        t_cfg = (cfg_recombine_volume(wl) * b / cfg_bw
+                 + (net.inter_lat if hplan.cfg_inter else net.intra_lat))
+    t_bubble = t_layers * (hplan.pp - 1) / (np_ * num_steps)
+    total = t_layers + exposed_pp + t_cfg + t_bubble
+    return {
+        "t_step": total,
+        "t_layers": t_layers,
+        "t_pp": t_pp,
+        "t_cfg": t_cfg,
+        "t_bubble": t_bubble,
+        "branches": float(branches),
+        "inter_elems_step": (branches * (n_layers / hplan.pp)
+                             * lat["inter_elems"]
+                             + (pipefusion_boundary_volume(wl, hplan.pp)
+                                if hplan.pp_inter else 0.0)
+                             + (cfg_recombine_volume(wl)
+                                if guided and hplan.cfg_inter else 0.0)),
     }

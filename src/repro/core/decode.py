@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 from .collectives import flat_rank
 from .softmax import MaskSpec, attend_partial
 from .strategy import SPConfig
@@ -91,7 +93,7 @@ def decode_attention(
         scale=scale,
         window=window,
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(qspec, cspec, cspec, qspec, qspec, P()),

@@ -1,0 +1,183 @@
+"""Displaced patch pipeline parallelism for DiT inference (PipeFusion,
+arXiv:2405.14430), composed with the SwiftFusion SP strategies.
+
+Diffusion sampling runs the same network num_steps times on slowly-varying
+inputs ("inter-step latent similarity").  PipeFusion exploits this with two
+moves:
+
+  1. **Patch pipelining** — split the latent sequence into ``num_patches``
+     contiguous patches and the DiT block stack into ``pp`` contiguous
+     stages, one stage per device along a ``pipe`` mesh axis.  Patches
+     stream through the stages GPipe-style, so each device holds only
+     ``n_layers / pp`` blocks and the activation working set of one patch.
+
+  2. **Displaced (one-step-stale) activations** — attention needs KV for
+     the *full* sequence, but only the resident patch is fresh on a stage.
+     PipeFusion's async variant reuses the previous diffusion step's
+     per-layer KV for every non-resident token instead of waiting, turning
+     the per-layer SP collectives into a single P2P activation hand-off
+     per stage boundary per step.  The approximation error vanishes as
+     sampling converges (x_t changes less and less per step); the first
+     ``warmup_steps`` steps run fully synchronous to populate the caches.
+
+This module owns the schedule/bookkeeping; the DiT-specific forward lives
+in models/dit.py (``dit_forward_displaced``) and the mesh/axis planning in
+core/planner.py (``plan_hybrid``).  See DESIGN.md §7 for how the
+single-program emulation below maps onto the paper-style multi-device
+schedule, and which parts of PipeFusion are deliberately deviated from.
+
+Freshness rule implemented here (async PipeFusion): when patch p is
+processed at diffusion step t, layer l's attention sees
+
+    K, V rows of patch p        : fresh (computed this step, this layer)
+    K, V rows of every other row: stale (step t-1, same layer)
+
+so every patch depends only on the previous step's state, never on another
+patch's current-step values — exactly the dependency structure that lets
+the real system run all stages concurrently without a sync point.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from typing import NamedTuple
+
+from .softmax import attend_partial, finalize, merge
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Patch-level pipeline parallelism knobs (PipeFusion).
+
+    ``pp``           — pipeline stages; DiT blocks are split into ``pp``
+                       contiguous groups along a ``pp_axis`` mesh axis
+                       (weights: the stacked 'layers' dim is sharded).
+    ``num_patches``  — latent patches streamed through the stages; 0 means
+                       "same as pp" (the paper's default M = N choice).
+    ``warmup_steps`` — leading sampler steps run fully synchronous (no
+                       staleness) to populate the per-layer KV state; must
+                       be >= 1.
+    ``pp_axis``      — mesh axis name holding the stages.
+    """
+
+    pp: int = 1
+    num_patches: int = 0
+    warmup_steps: int = 1
+    pp_axis: str = "pipe"
+
+    def __post_init__(self):
+        assert self.pp >= 1, self
+        assert self.num_patches >= 0, self
+        assert self.warmup_steps >= 1, "first step must populate the KV state"
+
+    @property
+    def patches(self) -> int:
+        return self.num_patches or self.pp
+
+    @property
+    def enabled(self) -> bool:
+        return self.pp > 1 or self.patches > 1
+
+
+class KVState(NamedTuple):
+    """Per-layer full-sequence attention KV from the previous sampler step.
+
+    ``k`` is stored post-RoPE so stale rows can be attended directly.
+    Shapes: [n_layers, B, T_total, Hkv, D] each, where T_total counts the
+    conditioning tokens + latent tokens (models/dit.py concatenates them).
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+
+def init_kv_state(n_layers: int, batch: int, seq_total: int, n_kv_heads: int,
+                  head_dim: int, dtype) -> KVState:
+    """Zero state with the right signature for the jitted displaced step.
+
+    Never *read* before warmup writes it (warmup_steps >= 1); zeros exist
+    only so the step function has a fixed input signature.
+    """
+    shape = (n_layers, batch, seq_total, n_kv_heads, head_dim)
+    return KVState(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# static partitioning helpers (all python ints — resolved at trace time)
+# ---------------------------------------------------------------------------
+
+def patch_slices(cond_tokens: int, latent_len: int,
+                 num_patches: int) -> list[tuple[int, int]]:
+    """(start, length) patches over the concatenated [cond ; latents] seq.
+
+    Patch 0 additionally owns the conditioning tokens, so their activations
+    are refreshed every step by whichever stage holds patch 0 — PipeFusion
+    treats the text tokens as resident state of the first micro-batch.
+    """
+    assert num_patches >= 1
+    assert latent_len % num_patches == 0, (
+        f"latent length {latent_len} must divide into {num_patches} patches")
+    chunk = latent_len // num_patches
+    out = [(0, cond_tokens + chunk)]
+    for p in range(1, num_patches):
+        out.append((cond_tokens + p * chunk, chunk))
+    return out
+
+
+def stage_layers(n_layers: int, pp: int) -> list[tuple[int, int]]:
+    """(first_layer, count) per pipeline stage — contiguous block split."""
+    assert n_layers % pp == 0, (
+        f"n_layers {n_layers} must divide into {pp} pipeline stages")
+    per = n_layers // pp
+    return [(s * per, per) for s in range(pp)]
+
+
+def drop_rows(x: jax.Array, start: int, length: int, axis: int) -> jax.Array:
+    """Remove rows [start, start+length) along ``axis`` (static indices)."""
+    lo = lax.slice_in_dim(x, 0, start, axis=axis)
+    hi = lax.slice_in_dim(x, start + length, x.shape[axis], axis=axis)
+    return jnp.concatenate([lo, hi], axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# displaced attention
+# ---------------------------------------------------------------------------
+
+def displaced_attention(
+    q: jax.Array,        # [B, Lp, Hq, D] fresh queries of the resident patch
+    k_fresh: jax.Array,  # [B, Lp, Hkv, D] fresh (post-RoPE) resident KV
+    v_fresh: jax.Array,
+    k_stale: jax.Array,  # [B, Lr, Hkv, D] one-step-stale KV, non-resident rows
+    v_stale: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Attention of a patch's fresh Q against mixed-freshness full-seq KV.
+
+    Uses the Appendix-C partial/merge algebra (the same machinery Ring and
+    Torus attention use) rather than a concat: the fresh and stale
+    contributions are computed as two unnormalised partials and merged with
+    one log-sum-exp rescale — so the stale tensors are consumed in place.
+    DiT attention is bidirectional and unwindowed, so no mask is needed.
+    """
+    fresh = attend_partial(q, k_fresh, v_fresh, scale=scale)
+    if k_stale.shape[1] == 0:
+        return finalize(fresh, dtype=q.dtype)
+    stale = attend_partial(q, k_stale.astype(q.dtype),
+                           v_stale.astype(q.dtype), scale=scale)
+    return finalize(merge(fresh, stale), dtype=q.dtype)
+
+
+def update_state_rows(state: KVState, k_new: jax.Array, v_new: jax.Array,
+                      start: int) -> KVState:
+    """Write fresh per-layer KV rows of one patch back into the state.
+
+    k_new/v_new: [n_layers, B, Lp, Hkv, D]; rows [start, start+Lp) of the
+    sequence axis (2) are replaced.
+    """
+    ins = lambda buf, new: lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), start, axis=2)
+    return KVState(k=ins(state.k, k_new), v=ins(state.v, v_new))

@@ -87,3 +87,108 @@ def usp_plan(
     inter-machine boundary and Ulysses stays intra-machine (§2.2)."""
     p = plan(n_machines, m_per_machine, num_q_heads, num_kv_heads, swift=False)
     return p
+
+
+# ---------------------------------------------------------------------------
+# hybrid planning: (cfg, pp, P_u, P_r) over N machines × M chips
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HybridPlan:
+    """A (cfg, pp, P_u, P_r) decomposition of N·M devices (DESIGN.md §7).
+
+    The hybrid axes are ordered by how rarely they synchronise:
+
+      cfg — classifier-free-guidance parallelism (xDiT, arXiv:2411.01738):
+            the conditional / unconditional branches are independent full
+            forwards that recombine ONCE per sampler step (one psum-sized
+            exchange of the velocity).  Cheapest axis; placed across the
+            slow (inter-machine) boundary first.
+      pp  — patch-level pipeline parallelism (PipeFusion): stages exchange
+            one patch's activations per micro-step, once per layer-group
+            rather than per layer.  Second-cheapest; also prefers the slow
+            boundary.
+      sp  — the remaining devices run the paper's topology-aware SP plan
+            (Torus/TAS placement rules unchanged) on the residual
+            (machines × chips) sub-mesh.
+    """
+
+    cfg: int  # 1 (sequential CFG) or 2 (parallel branches)
+    pp: int  # pipeline stages
+    sp: SPPlan  # SP factorisation of the remaining devices
+    n_machines: int  # N of the full cluster
+    m_per_machine: int  # M of the full cluster
+    cfg_machines: int = 1  # machine-level factor consumed by cfg
+    pp_machines: int = 1  # machine-level factor consumed by pp
+
+    @property
+    def total_devices(self) -> int:
+        return self.cfg * self.pp * self.sp.sp_degree
+
+    @property
+    def cfg_inter(self) -> bool:
+        """True when the CFG pair spans the inter-machine boundary."""
+        return self.cfg_machines > 1
+
+    @property
+    def pp_inter(self) -> bool:
+        """True when pipeline-stage hand-offs cross machines."""
+        return self.pp_machines > 1
+
+    def validate(self) -> None:
+        assert self.cfg in (1, 2), self
+        assert self.pp >= 1, self
+        self.sp.validate()
+        assert self.total_devices == self.n_machines * self.m_per_machine, self
+
+
+def _consume(n: int, m: int, degree: int) -> tuple[int, int, int]:
+    """Factor ``degree`` devices out of (n machines × m chips), machines
+    first (independent/cheap axes belong on the slow boundary).  Returns
+    (n', m', machine_factor)."""
+    from_n = math.gcd(n, degree)
+    from_m = degree // from_n
+    if m % from_m != 0:
+        raise ValueError(
+            f"cannot factor degree {degree} out of {n} machines x {m} chips")
+    return n // from_n, m // from_m, from_n
+
+
+def plan_hybrid(
+    n_machines: int,
+    m_per_machine: int,
+    num_q_heads: int,
+    num_kv_heads: int | None = None,
+    *,
+    cfg_parallel: bool = False,
+    pp: int = 1,
+    n_layers: int | None = None,
+    swift: bool = True,
+    replicate_kv: bool = False,
+) -> HybridPlan:
+    """Plan (cfg, pp, P_u, P_r) for N machines × M chips.
+
+    cfg and pp consume machine-level factors first (they synchronise the
+    least, see HybridPlan); whatever remains is planned by the paper's §4.2
+    rule, so the SP sub-mesh keeps the TAS placement (Ulysses/Torus across
+    the surviving machine boundary, Ring inside the machine).
+    """
+    cfg = 2 if cfg_parallel else 1
+    total = n_machines * m_per_machine
+    if total % (cfg * pp) != 0:
+        raise ValueError(
+            f"cfg*pp = {cfg * pp} does not divide {total} devices")
+    if n_layers is not None and pp > 1 and n_layers % pp != 0:
+        raise ValueError(f"pp = {pp} does not divide n_layers = {n_layers}")
+    n, m = n_machines, m_per_machine
+    n, m, cfg_mach = _consume(n, m, cfg)
+    n, m, pp_mach = _consume(n, m, pp)
+    sp = plan(n, m, num_q_heads, num_kv_heads, swift=swift,
+              replicate_kv=replicate_kv)
+    h = HybridPlan(
+        cfg=cfg, pp=pp, sp=sp,
+        n_machines=n_machines, m_per_machine=m_per_machine,
+        cfg_machines=cfg_mach, pp_machines=pp_mach,
+    )
+    h.validate()
+    return h

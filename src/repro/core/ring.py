@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import optimization_barrier
+
 from .collectives import GroupLayout, ppermute
 from .softmax import (MaskSpec, Partial, attend_partial,
                       attend_partial_blockwise, empty_partial, merge)
@@ -98,7 +100,7 @@ def ring_attention(
             # step's score matrix is live; the next permute stays independent
             kn = ppermute(kc, layout.axes, perm)
             vn = ppermute(vc, layout.axes, perm)
-            gated = lax.optimization_barrier((kc, vc) + tuple(acc))
+            gated = optimization_barrier((kc, vc) + tuple(acc))
             kc_g, vc_g = gated[0], gated[1]
             acc = Partial(*gated[2:])
             owner = (my_r - s) % p_r

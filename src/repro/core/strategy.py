@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 from . import planner
 from .collectives import GroupLayout
 from .ring import ring_attention
@@ -44,6 +46,15 @@ class SPConfig:
     batch_axes: tuple[str, ...] | None = ("data",)  # batch (DP) mesh axes
     machine_axis: str = "pod"  # the slow-boundary axis (paper's N)
     replicate_kv: bool = False  # allow P_u up to gcd(SP, Hq) by replicating KV
+    # Hybrid-parallel axes (DESIGN.md §7).  cfg_axis: the 2-way classifier-
+    # free-guidance axis — the sampler stacks the cond/uncond branches on
+    # the batch dim and this axis shards them, so attention (and, via GSPMD
+    # propagation, the whole block) computes the two branches on disjoint
+    # mesh halves.  pp_axis: the patch-pipeline stage axis — never touched
+    # by attention itself (it partitions the *layer* dim of the weights);
+    # named here so planners/engines can find it.
+    cfg_axis: str | None = None
+    pp_axis: str | None = None
     # Unrolled ring steps let XLA schedule each permute against the next
     # step's compute AND make HLO cost_analysis see every trip (lax loops
     # are counted once); fori_loop is available for very large P_r.
@@ -57,6 +68,22 @@ class SPConfig:
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
+
+    def effective_batch_axes(
+        self, mesh: jax.sharding.Mesh | None = None
+    ) -> tuple[str, ...] | None:
+        """Batch mesh axes with the CFG axis prepended (when present).
+
+        The CFG pair is stacked on the batch dim by the sampler, so for
+        sharding purposes it is just the major batch axis.  When a mesh is
+        given, axes it does not carry are dropped — the same SPConfig then
+        works on meshes with and without a 'cfg' axis.
+        """
+        axes = ((self.cfg_axis,) if self.cfg_axis else ()) + tuple(
+            self.batch_axes or ())
+        if mesh is not None:
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+        return axes or None
 
 
 def resolve_layout(
@@ -126,7 +153,7 @@ def sp_attention(
             k = jnp.repeat(k, rep, axis=2)
             v = jnp.repeat(v, rep, axis=2)
 
-    ba = cfg.batch_axes
+    ba = cfg.effective_batch_axes(mesh)
     spec = P(ba, cfg.sp_axes, None, None)
 
     if cfg.strategy == "swift_torus":
@@ -141,7 +168,7 @@ def sp_attention(
             window=window, unroll=cfg.unroll_ring, kv_block=cfg.attn_kv_block,
         )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda q, k, v: body(q, k, v),
         mesh=mesh,
         in_specs=(spec, spec, spec),

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import optimization_barrier
+
 from .collectives import GroupLayout, ppermute
 from .ring import ring_attention
 from .softmax import Partial, empty_partial, finalize, merge
@@ -38,7 +40,7 @@ from .softmax import Partial, empty_partial, finalize, merge
 
 def _pin(acc: Partial) -> Partial:
     """Schedule barrier on the accumulator chain."""
-    return Partial(*lax.optimization_barrier(tuple(acc)))
+    return Partial(*optimization_barrier(tuple(acc)))
 
 
 def _gate(tensors: tuple, acc: Partial):
@@ -46,7 +48,7 @@ def _gate(tensors: tuple, acc: Partial):
     cannot start before stage k-1 merged, so only O(1) score matrices are
     ever live (the ppermutes themselves don't consume acc and still get
     hoisted/overlapped by the scheduler)."""
-    out = lax.optimization_barrier(tuple(tensors) + tuple(acc))
+    out = optimization_barrier(tuple(tensors) + tuple(acc))
     n = len(tensors)
     return out[:n], Partial(*out[n:])
 from .ulysses import group_positions, scatter_o

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 NEG_INF = float("-inf")
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
@@ -178,7 +180,7 @@ def flash_mqkv(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(pltpu,
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 EPS = 1e-6
 DEFAULT_CHUNK = 64
 
@@ -103,7 +105,7 @@ def rwkv6_wkv(
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((bh, l, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(pltpu,
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

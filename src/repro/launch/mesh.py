@@ -6,19 +6,30 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (fake or real) devices exist — used by
     smoke tests, examples, and the multidevice test suite."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return make_mesh((data, model), ("data", "model"))
+
+
+def make_hybrid_mesh(cfg: int = 1, pipe: int = 1, data: int = 1,
+                     model: int = 1) -> jax.sharding.Mesh:
+    """(cfg, pipe, data, model) mesh for hybrid-parallel DiT serving
+    (DESIGN.md §7).
+
+    Axis order mirrors the planner's boundary preference: cfg (syncs once
+    per step) outermost, then pipe (stage hand-offs), then the batch and
+    SP axes — on real hardware the outer axes land on the slow network.
+    Size-1 axes are kept so one SPConfig works across degrees.
+    """
+    return make_mesh((cfg, pipe, data, model), ("cfg", "pipe", "data", "model"))

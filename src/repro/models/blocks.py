@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import SPConfig, decode_attention, sp_attention
+from ..core.pipefusion import displaced_attention
 
 Params = dict[str, Any]
 
@@ -256,8 +257,22 @@ def attention(
     cur_index: jax.Array | None = None,
     xkv: jax.Array | None = None,  # cross-attention source (whisper decoder)
     causal: bool | None = None,
-) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
-    """Returns (output [B, L, d], updated kv_cache or None)."""
+    extra_kv: tuple[jax.Array, jax.Array] | None = None,
+    return_kv: bool = False,
+):
+    """Returns (output [B, L, d], updated kv_cache or None).
+
+    ``extra_kv`` — one-step-stale full-sequence KV of the *non-resident*
+    rows for displaced patch pipelining (PipeFusion; DESIGN.md §7): K is
+    already post-RoPE, and the patch's fresh KV is merged with it via the
+    Appendix-C partial algebra instead of the SP schedule (the resident
+    patch and the stale rows have different sequence lengths, so the
+    equal-shard SP collectives don't apply).  Only valid for
+    non-causal, unwindowed attention (DiT).
+
+    ``return_kv`` — additionally return this call's (post-RoPE K, V) as a
+    third element, so the sampler can populate the stale-KV state.
+    """
     b_, l_, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     causal = cfg.causal if causal is None else causal
@@ -270,7 +285,13 @@ def attention(
         q, k = apply_rope(q, k, positions, variant=cfg.rope, theta=cfg.rope_theta,
                           rope_pct=cfg.rope_pct)
 
-    if ctx.decode and xkv is None:
+    if extra_kv is not None:
+        assert not ctx.decode and xkv is None
+        assert not causal and window is None, (
+            "displaced attention is DiT-only (bidirectional, unwindowed)")
+        o = displaced_attention(q, k, v, extra_kv[0], extra_kv[1])
+        new_cache = None
+    elif ctx.decode and xkv is None:
         assert kv_cache is not None and cur_index is not None
         kc, vc = kv_cache
         o, kc, vc = decode_attention(
@@ -287,7 +308,10 @@ def attention(
                          window=_static_window(window))
         new_cache = None
     o = o.reshape(b_, l_, hq * hd)
-    return linear(o, p["wo"]), new_cache
+    out = linear(o, p["wo"])
+    if return_kv:
+        return out, new_cache, (k, v)
+    return out, new_cache
 
 
 def _static_window(window):

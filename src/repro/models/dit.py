@@ -18,6 +18,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ModelConfig
+from ..core.pipefusion import (
+    KVState,
+    drop_rows,
+    patch_slices,
+    stage_layers,
+    update_state_rows,
+)
 from .blocks import (
     ParallelContext,
     ParamBuilder,
@@ -74,6 +81,24 @@ def _modulate(x, shift, scale):
     return x * (1.0 + scale[:, None]) + shift[:, None]
 
 
+def _time_embedding(params: Params, timesteps: jax.Array, dtype) -> jax.Array:
+    temb = sinusoidal_embedding(TIME_EMB, TIME_EMB)  # reuse table as freqs
+    t_feat = jnp.concatenate(
+        [jnp.sin(timesteps[:, None] * 1000.0 * temb[0, : TIME_EMB // 2]),
+         jnp.cos(timesteps[:, None] * 1000.0 * temb[0, : TIME_EMB // 2])],
+        axis=-1,
+    ).astype(dtype)
+    return linear(jax.nn.silu(linear(t_feat, params["time_mlp1"])),
+                  params["time_mlp2"])  # [B, d]
+
+
+def _final_projection(params: Params, cfg: ModelConfig, x: jax.Array,
+                      t_emb: jax.Array) -> jax.Array:
+    sh, sc = jnp.split(linear(t_emb, params["ada_f"]), 2, axis=-1)
+    x = _modulate(norm(x, params["ln_f"], cfg.norm), sh, sc)
+    return linear(x, params["proj_out"])
+
+
 def dit_forward(
     params: Params,
     cfg: ModelConfig,
@@ -82,37 +107,110 @@ def dit_forward(
     latents: jax.Array,  # [B, T, LATENT_CHANNELS]
     cond: jax.Array,  # [B, COND_TOKENS, d] (stub text encoder output)
     timesteps: jax.Array,  # [B] in [0, 1]
-) -> jax.Array:
-    """Returns predicted velocity [B, T, LATENT_CHANNELS]."""
+    return_layer_kv: bool = False,
+):
+    """Returns predicted velocity [B, T, LATENT_CHANNELS].
+
+    With ``return_layer_kv`` also returns a KVState of every layer's
+    full-sequence post-RoPE (K, V) — the warmup pass of displaced patch
+    pipelining (DESIGN.md §7) uses this to seed the stale-activation
+    caches.  The x-path computation is identical either way.
+    """
     b_, t_, _ = latents.shape
     x_lat = linear(latents, params["proj_in"])
     x_cond = linear(cond, params["cond_proj"])
     x = jnp.concatenate([x_cond, x_lat], axis=1)
     l_ = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(l_)[None], (b_, l_))
-
-    temb = sinusoidal_embedding(TIME_EMB, TIME_EMB)  # reuse table as freqs
-    t_feat = jnp.concatenate(
-        [jnp.sin(timesteps[:, None] * 1000.0 * temb[0, : TIME_EMB // 2]),
-         jnp.cos(timesteps[:, None] * 1000.0 * temb[0, : TIME_EMB // 2])],
-        axis=-1,
-    ).astype(x.dtype)
-    t_emb = linear(jax.nn.silu(linear(t_feat, params["time_mlp1"])),
-                   params["time_mlp2"])  # [B, d]
+    t_emb = _time_embedding(params, timesteps, x.dtype)
 
     def body(x, lp):
         mod = linear(t_emb, lp["ada"])  # [B, 6d]
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
         h = _modulate(norm(x, lp["ln_attn"], cfg.norm), sh1, sc1)
-        o, _ = attention(h, lp["attn"], cfg, ctx, positions, causal=False)
+        if return_layer_kv:
+            o, _, kv = attention(h, lp["attn"], cfg, ctx, positions,
+                                 causal=False, return_kv=True)
+        else:
+            o, _ = attention(h, lp["attn"], cfg, ctx, positions, causal=False)
+            kv = None
         x = x + g1[:, None] * o
         h = _modulate(norm(x, lp["ln_mlp"], cfg.norm), sh2, sc2)
         x = x + g2[:, None] * mlp(h, lp["mlp"], cfg)
-        return x, None
+        return x, kv
 
     body = ctx.remat_wrap(body)
-    x, _ = lax.scan(body, x, params["layers"], unroll=cfg.n_layers <= 2)
-    sh, sc = jnp.split(linear(t_emb, params["ada_f"]), 2, axis=-1)
-    x = _modulate(norm(x, params["ln_f"], cfg.norm), sh, sc)
-    v = linear(x, params["proj_out"])
-    return v[:, COND_TOKENS:]  # velocity for latent positions only
+    x, kv = lax.scan(body, x, params["layers"], unroll=cfg.n_layers <= 2)
+    v = _final_projection(params, cfg, x, t_emb)[:, COND_TOKENS:]
+    if return_layer_kv:
+        return v, KVState(k=kv[0], v=kv[1])
+    return v
+
+
+def dit_forward_displaced(
+    params: Params,
+    cfg: ModelConfig,
+    ctx: ParallelContext,
+    *,
+    latents: jax.Array,  # [B, T, LATENT_CHANNELS]
+    cond: jax.Array,  # [B, COND_TOKENS, d]
+    timesteps: jax.Array,  # [B]
+    kv_state: KVState,  # per-layer stale KV from the previous sampler step
+    num_patches: int,
+    pp: int = 1,
+) -> tuple[jax.Array, KVState]:
+    """One displaced-pipeline DiT forward (PipeFusion async; DESIGN.md §7).
+
+    The latent sequence is split into ``num_patches`` patches (patch 0 also
+    owns the conditioning tokens); each patch runs the full block stack
+    with fresh Q/KV for its own rows and one-step-stale KV (``kv_state``)
+    for every other row.  Fresh per-layer KV is written back, giving the
+    next step its stale state.  Returns (velocity, new KVState).
+
+    The python patch loop realises the same dataflow the pp-stage pipeline
+    executes across devices: stage s = layers ``stage_layers(L, pp)[s]``,
+    micro-step (p, s) runs patch p's slice of the scan below.  ``pp`` only
+    validates the stage split here — the weights' layer dim is what the
+    engine shards over the pipe axis.
+    """
+    b_, t_, _ = latents.shape
+    stage_layers(cfg.n_layers, pp)  # validate the stage partition
+    slices = patch_slices(COND_TOKENS, t_, num_patches)
+
+    x_lat = linear(latents, params["proj_in"])
+    x_cond = linear(cond, params["cond_proj"])
+    x_full = jnp.concatenate([x_cond, x_lat], axis=1)
+    total = x_full.shape[1]
+    t_emb = _time_embedding(params, timesteps, x_full.dtype)
+
+    new_state = kv_state
+    vel_chunks = []
+    for start, length in slices:
+        xp = lax.dynamic_slice_in_dim(x_full, start, length, axis=1)
+        pos = jnp.broadcast_to(jnp.arange(start, start + length)[None],
+                               (b_, length))
+        # stale KV for every NON-resident row, per layer: [L, B, T-len, ...]
+        ek = drop_rows(kv_state.k, start, length, axis=2)
+        ev = drop_rows(kv_state.v, start, length, axis=2)
+
+        def body(x, xs):
+            lp, ek_l, ev_l = xs
+            mod = linear(t_emb, lp["ada"])
+            sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+            h = _modulate(norm(x, lp["ln_attn"], cfg.norm), sh1, sc1)
+            o, _, kv = attention(h, lp["attn"], cfg, ctx, pos, causal=False,
+                                 extra_kv=(ek_l, ev_l), return_kv=True)
+            x = x + g1[:, None] * o
+            h = _modulate(norm(x, lp["ln_mlp"], cfg.norm), sh2, sc2)
+            x = x + g2[:, None] * mlp(h, lp["mlp"], cfg)
+            return x, kv
+
+        xp, (kp, vp) = lax.scan(body, xp, (params["layers"], ek, ev),
+                                unroll=cfg.n_layers <= 2)
+        new_state = update_state_rows(new_state, kp, vp, start)
+        vp_out = _final_projection(params, cfg, xp, t_emb)
+        if start == 0:  # patch 0 carries the conditioning tokens
+            vp_out = vp_out[:, COND_TOKENS:]
+        vel_chunks.append(vp_out)
+    assert total == COND_TOKENS + t_
+    return jnp.concatenate(vel_chunks, axis=1), new_state

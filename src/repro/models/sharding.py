@@ -39,11 +39,15 @@ TRAIN_EXTRAS: dict[str, tuple[str, ...]] = {
 }
 
 
-def rules_for(cfg: ModelConfig, mode: str) -> dict[str, tuple[str, ...]]:
+def rules_for(cfg: ModelConfig, mode: str,
+              extra_rules: dict[str, tuple[str, ...]] | None = None
+              ) -> dict[str, tuple[str, ...]]:
     rules = dict(BASE_RULES)
     if mode == "train":
         rules.update(TRAIN_EXTRAS)
     rules.update({k: tuple(v) for k, v in cfg.sharding_overrides})
+    if extra_rules:  # e.g. {"layers": ("pipe",)} for patch pipelining
+        rules.update(extra_rules)
     return rules
 
 
@@ -56,9 +60,10 @@ def _spec_of(logical: tuple[str | None, ...], rules, mesh: Mesh) -> P:
     return P(*entries)
 
 
-def param_shardings(axes_tree, cfg: ModelConfig, mesh: Mesh, mode: str):
+def param_shardings(axes_tree, cfg: ModelConfig, mesh: Mesh, mode: str,
+                    extra_rules: dict[str, tuple[str, ...]] | None = None):
     """Pytree of NamedSharding mirroring the params pytree."""
-    rules = rules_for(cfg, mode)
+    rules = rules_for(cfg, mode, extra_rules)
     is_leaf = lambda x: isinstance(x, tuple)
     return jax.tree.map(
         lambda lg: NamedSharding(mesh, _spec_of(lg, rules, mesh)),

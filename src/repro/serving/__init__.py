@@ -1,5 +1,12 @@
 from .engine import ARRequest, ARServer, DiTRequest, DiTResult, DiTServer
-from .sampler import SamplerConfig, sample, sample_step, toy_vae_decode
+from .sampler import (
+    SamplerConfig,
+    hybrid_sample_step,
+    hybrid_state_shape,
+    sample,
+    sample_step,
+    toy_vae_decode,
+)
 
 __all__ = [
     "ARRequest",
@@ -8,6 +15,8 @@ __all__ = [
     "DiTResult",
     "DiTServer",
     "SamplerConfig",
+    "hybrid_sample_step",
+    "hybrid_state_shape",
     "sample",
     "sample_step",
     "toy_vae_decode",

@@ -22,9 +22,14 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core import SPConfig
-from ..models import ParallelContext, get_model
+from ..models import ParallelContext, get_model, param_shardings
 from ..models.dit import COND_TOKENS
-from .sampler import SamplerConfig, sample_step
+from .sampler import (
+    SamplerConfig,
+    hybrid_sample_step,
+    hybrid_state_shape,
+    sample_step,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -48,17 +53,40 @@ class DiTResult:
 
 
 class DiTServer:
+    """Batched DiT sampling over the hybrid-parallel mesh (DESIGN.md §7).
+
+    Beyond plain SP the server drives two optional extra axes:
+      * ``sampler.cfg_parallel`` — the CFG pair is evaluated on the
+        ``sp.cfg_axis`` halves of the mesh (one psum-style recombine per
+        step).
+      * ``sampler.pipeline`` — displaced patch pipelining: the server jits
+        warm/displaced step variants per (batch, seq) bucket and threads
+        the per-layer stale-KV state across the sampling loop.  When the
+        mesh carries ``sp.pp_axis`` and ``param_axes`` is given, the
+        stacked DiT block weights are sharded over the pipe axis, so each
+        stage holds n_layers / pp blocks.
+    """
+
     def __init__(self, params, cfg: ModelConfig, mesh, sp: SPConfig,
                  sampler: SamplerConfig = SamplerConfig(),
-                 max_batch: int = 4):
+                 max_batch: int = 4, param_axes=None):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "prefill")
         self.sampler = sampler
         self.max_batch = max_batch
         self.queue: deque[DiTRequest] = deque()
-        self._step_cache: dict[tuple[int, int], Callable] = {}
+        # plain sampling caches one jitted step; pipelined sampling caches a
+        # (warm, displaced) pair
+        self._step_cache: dict[
+            tuple[int, int], Callable | tuple[Callable, Callable]] = {}
         self._rng = jax.random.PRNGKey(0)
+        if (sampler.pipelined and sp.pp_axis
+                and sp.pp_axis in mesh.axis_names and param_axes is not None):
+            # stage partitioning: each pipe rank holds its n_layers/pp blocks
+            sh = param_shardings(param_axes, cfg, mesh, "serve",
+                                 extra_rules={"layers": (sp.pp_axis,)})
+            self.params = jax.device_put(params, sh)
 
     def submit(self, req: DiTRequest) -> None:
         req.submitted = time.time()
@@ -69,11 +97,24 @@ class DiTServer:
         if key not in self._step_cache:
             dt = 1.0 / self.sampler.num_steps
 
-            def f(params, x, cond, t):
-                return sample_step(params, self.cfg, self.ctx, x, cond, t,
-                                   dt, self.sampler)
+            if self.sampler.pipelined:
+                def warm(params, x, cond, t, state):
+                    return hybrid_sample_step(params, self.cfg, self.ctx, x,
+                                              cond, t, dt, self.sampler,
+                                              state, warm=True)
 
-            self._step_cache[key] = jax.jit(f)
+                def displaced(params, x, cond, t, state):
+                    return hybrid_sample_step(params, self.cfg, self.ctx, x,
+                                              cond, t, dt, self.sampler,
+                                              state, warm=False)
+
+                self._step_cache[key] = (jax.jit(warm), jax.jit(displaced))
+            else:
+                def f(params, x, cond, t):
+                    return sample_step(params, self.cfg, self.ctx, x, cond, t,
+                                       dt, self.sampler)
+
+                self._step_cache[key] = jax.jit(f)
         return self._step_cache[key]
 
     def _next_batch(self) -> list[DiTRequest]:
@@ -114,8 +155,17 @@ class DiTServer:
         x = jax.random.normal(sub, (b, t, 64), self.cfg.dtype)
         fn = self._step_fn(b, t)
         dt = 1.0 / self.sampler.num_steps
-        for i in range(self.sampler.num_steps):
-            x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
+        if self.sampler.pipelined:
+            warm_fn, displaced_fn = fn
+            state = hybrid_state_shape(self.cfg, b, t, self.sampler)
+            for i in range(self.sampler.num_steps):
+                f = (warm_fn if i < self.sampler.pipeline.warmup_steps
+                     else displaced_fn)
+                x, state = f(self.params, x, cond, jnp.float32(1.0 - i * dt),
+                             state)
+        else:
+            for i in range(self.sampler.num_steps):
+                x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
         x.block_until_ready()
         now = time.time()
         return [

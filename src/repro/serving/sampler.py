@@ -5,6 +5,22 @@ the unit the paper benchmarks ("latency of one sampling step").  The
 sampler integrates x_t from t=1 (noise) to t=0 (data) with uniform Euler
 steps; the toy linear VAE decode is the stubbed frontend inverse
 (DESIGN.md §6).
+
+Beyond the paper, the sampler composes two extra parallel axes with SP
+(DESIGN.md §7):
+
+  * **CFG parallelism** (``SamplerConfig.cfg_parallel``): with guidance
+    enabled, the conditional and unconditional branches are stacked on the
+    batch dim and — when the mesh carries ``SPConfig.cfg_axis`` — sharded
+    across a 2-way mesh axis, so each half of the mesh runs one branch.
+    The branches recombine with a single psum-style weighted sum of the
+    velocities (``v = g·v_cond + (1-g)·v_uncond``), the only cross-branch
+    communication of the whole step.
+  * **Displaced patch pipelining** (``SamplerConfig.pipeline``): after
+    ``warmup_steps`` synchronous steps, each step runs the PipeFusion
+    forward (models/dit.py: ``dit_forward_displaced``) reusing
+    one-step-stale KV for non-resident patches; the sampler threads the
+    per-layer KVState across steps.
 """
 from __future__ import annotations
 
@@ -14,41 +30,159 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core.pipefusion import KVState, PipelineConfig, init_kv_state
 from ..models import ParallelContext
-from ..models.dit import LATENT_CHANNELS, dit_forward
+from ..models.dit import (
+    COND_TOKENS,
+    LATENT_CHANNELS,
+    dit_forward,
+    dit_forward_displaced,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class SamplerConfig:
     num_steps: int = 20
     guidance_scale: float = 1.0  # >1 enables classifier-free guidance
+    # hybrid parallelism (DESIGN.md §7); both compose with any SP strategy
+    cfg_parallel: bool = False  # evaluate the CFG pair on the cfg mesh axis
+    pipeline: PipelineConfig | None = None  # patch-level pipelining
+
+    @property
+    def guided(self) -> bool:
+        return self.guidance_scale != 1.0
+
+    @property
+    def pipelined(self) -> bool:
+        return self.pipeline is not None and self.pipeline.enabled
+
+
+def _cfg_recombine(v_pair: jax.Array, batch: int, g: float) -> jax.Array:
+    """The single cross-branch exchange: v = g·v_cond + (1-g)·v_uncond.
+
+    Written as a weighted sum (not ``v_u + g (v_c - v_u)``) so with the
+    pair sharded over the cfg axis it lowers to exactly one psum-sized
+    collective of the velocity tensor.
+    """
+    v_c, v_u = v_pair[:batch], v_pair[batch:]
+    return g * v_c + (1.0 - g) * v_u
+
+
+def _stack_cfg_pair(x_t, cond):
+    """[B,...] -> [2B,...]: conditional branch first, unconditional second."""
+    return (jnp.concatenate([x_t, x_t], axis=0),
+            jnp.concatenate([cond, jnp.zeros_like(cond)], axis=0))
+
+
+def _ctx_for(ctx: ParallelContext, sc: SamplerConfig) -> ParallelContext:
+    """Drop the cfg mesh axis from the sharding specs unless this sampler
+    config actually stacks the CFG pair — otherwise the un-doubled batch
+    cannot be sharded over the 2-way cfg axis (shard_map divisibility)."""
+    if ctx.sp.cfg_axis and not (sc.guided and sc.cfg_parallel):
+        return dataclasses.replace(
+            ctx, sp=dataclasses.replace(ctx.sp, cfg_axis=None))
+    return ctx
 
 
 def sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
                 x_t: jax.Array, cond: jax.Array, t: jax.Array,
                 dt: jax.Array, sc: SamplerConfig) -> jax.Array:
     """One Euler step x_{t-dt} = x_t - dt * v(x_t, t)."""
+    ctx = _ctx_for(ctx, sc)
     b = x_t.shape[0]
     tt = jnp.full((b,), t, jnp.float32)
+    if sc.guided and sc.cfg_parallel:
+        lat2, cond2 = _stack_cfg_pair(x_t, cond)
+        v2 = dit_forward(params, cfg, ctx, latents=lat2, cond=cond2,
+                         timesteps=jnp.concatenate([tt, tt]))
+        v = _cfg_recombine(v2, b, sc.guidance_scale)
+        return x_t - dt * v.astype(x_t.dtype)
     v = dit_forward(params, cfg, ctx, latents=x_t, cond=cond, timesteps=tt)
-    if sc.guidance_scale != 1.0:
+    if sc.guided:
         v_un = dit_forward(params, cfg, ctx, latents=x_t,
                            cond=jnp.zeros_like(cond), timesteps=tt)
         v = v_un + sc.guidance_scale * (v - v_un)
     return x_t - dt * v.astype(x_t.dtype)
 
 
+# ---------------------------------------------------------------------------
+# hybrid (cfg-parallel × patch-pipelined) stepping with threaded KV state
+# ---------------------------------------------------------------------------
+
+def hybrid_state_shape(cfg: ModelConfig, batch: int, seq_len: int,
+                       sc: SamplerConfig) -> KVState:
+    """Zero KVState matching what the hybrid steps thread (cfg pair incl.)."""
+    b = 2 * batch if (sc.guided and sc.cfg_parallel) else batch
+    return init_kv_state(cfg.n_layers, b, COND_TOKENS + seq_len,
+                         cfg.n_kv_heads, cfg.resolved_head_dim,
+                         jnp.dtype(cfg.dtype))
+
+
+def hybrid_sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
+                       x_t: jax.Array, cond: jax.Array, t: jax.Array,
+                       dt: jax.Array, sc: SamplerConfig, state: KVState,
+                       *, warm: bool) -> tuple[jax.Array, KVState]:
+    """One Euler step that also threads the displaced-pipeline KV state.
+
+    ``warm`` (static): True runs the fully-synchronous forward — identical
+    computation to ``sample_step``'s x-path — while capturing per-layer KV;
+    False runs the PipeFusion displaced forward against ``state``.
+    """
+    assert sc.pipelined
+    ctx = _ctx_for(ctx, sc)
+    pipe = sc.pipeline
+    b = x_t.shape[0]
+    tt = jnp.full((b,), t, jnp.float32)
+    if sc.guided and sc.cfg_parallel:
+        lat_in, cond_in = _stack_cfg_pair(x_t, cond)
+        tt_in = jnp.concatenate([tt, tt])
+    elif sc.guided:
+        raise NotImplementedError(
+            "pipelined sampling with sequential CFG would need two KV "
+            "states; enable cfg_parallel (works on any mesh) instead")
+    else:
+        lat_in, cond_in, tt_in = x_t, cond, tt
+
+    if warm:
+        v_out, state = dit_forward(params, cfg, ctx, latents=lat_in,
+                                   cond=cond_in, timesteps=tt_in,
+                                   return_layer_kv=True)
+    else:
+        v_out, state = dit_forward_displaced(
+            params, cfg, ctx, latents=lat_in, cond=cond_in, timesteps=tt_in,
+            kv_state=state, num_patches=pipe.patches, pp=pipe.pp)
+    if sc.guided and sc.cfg_parallel:
+        v = _cfg_recombine(v_out, b, sc.guidance_scale)
+    else:
+        v = v_out
+    return x_t - dt * v.astype(x_t.dtype), state
+
+
 def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
            key: jax.Array, batch: int, seq_len: int, cond: jax.Array,
            sc: SamplerConfig = SamplerConfig(),
            step_fn=None) -> jax.Array:
-    """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS]."""
+    """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS].
+
+    With ``sc.pipeline`` set, the loop threads the displaced-pipeline KV
+    state: the first ``warmup_steps`` steps run synchronously, the rest
+    displaced (PipeFusion).  A custom ``step_fn`` bypasses all of that.
+    """
     x = jax.random.normal(key, (batch, seq_len, LATENT_CHANNELS), cfg.dtype)
     dt = 1.0 / sc.num_steps
-    fn = step_fn or (lambda x, c, t: sample_step(params, cfg, ctx, x, c, t, dt, sc))
+    if step_fn is not None:
+        for i in range(sc.num_steps):
+            x = step_fn(x, cond, 1.0 - i * dt)
+        return x
+    if not sc.pipelined:
+        for i in range(sc.num_steps):
+            x = sample_step(params, cfg, ctx, x, cond, 1.0 - i * dt, dt, sc)
+        return x
+    state = hybrid_state_shape(cfg, batch, seq_len, sc)
     for i in range(sc.num_steps):
-        t = 1.0 - i * dt
-        x = fn(x, cond, t)
+        warm = i < sc.pipeline.warmup_steps
+        x, state = hybrid_sample_step(params, cfg, ctx, x, cond,
+                                      1.0 - i * dt, dt, sc, state, warm=warm)
     return x
 
 

@@ -1,0 +1,97 @@
+"""Deterministic fallback for the tiny slice of `hypothesis` this suite uses.
+
+The container image does not ship `hypothesis`; rather than skip the
+property tests (they guard the planner/comm-model invariants the paper's
+claims rest on), conftest.py installs this module as ``hypothesis`` when
+the real package is absent.  It reimplements exactly the API surface the
+tests touch:
+
+    @given(st.integers(lo, hi), st.sampled_from(seq), st.booleans())
+    @settings(max_examples=N, deadline=None)
+
+Semantics: each ``given``-wrapped test runs ``max_examples`` times with
+examples drawn from a PRNG seeded by the test's qualified name, so runs
+are reproducible and independent of test order.  No shrinking, no
+database — on failure the raw example values appear in the assertion
+traceback.  See tests/README.md.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+
+class SearchStrategy:
+    """A sampleable value source (the only thing our tests need)."""
+
+    def __init__(self, sample, name):
+        self._sample = sample
+        self.name = name
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return self.name
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return SearchStrategy(
+            lambda rng: rng.randint(min_value, max_value),
+            f"integers({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def sampled_from(elements):
+        elems = list(elements)
+        return SearchStrategy(lambda rng: rng.choice(elems), f"sampled_from({elems})")
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+strategies = _Strategies()
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Records max_examples on the function; works above or below @given."""
+
+    def deco(fn):
+        # @settings below @given: fn is the given-wrapper -> update its knob.
+        # @settings above @given: fn is the raw test -> @given reads the attr.
+        fn._mh_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying fn's signature would make
+        # pytest treat the example parameters as fixture requests.
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_mh_max_examples",
+                        getattr(wrapper, "_mh_max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(f"mini-hypothesis:{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                example = tuple(s.sample(rng) for s in strats)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:  # annotate which example failed
+                    raise AssertionError(
+                        f"falsifying example #{i}: "
+                        f"{fn.__name__}{example!r}"
+                    ) from e
+
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        wrapper._mh_max_examples = getattr(fn, "_mh_max_examples", None) or \
+            _DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return deco

@@ -6,6 +6,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # the container image has no hypothesis; fall back to the mini shim
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _mini_hypothesis
+
+    sys.modules["hypothesis"] = _mini_hypothesis
+    sys.modules["hypothesis.strategies"] = _mini_hypothesis.strategies
+
 import jax
 import pytest
 
