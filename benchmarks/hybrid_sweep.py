@@ -41,16 +41,16 @@ WORKLOADS = {
 M_PER_MACHINE = 8  # paper testbed: 8 GPUs per machine
 
 
-def run() -> list[str]:
-    rows = []
+def _sweep():
+    """Yield (name, workload-name, n, plan-dict, prediction-dict) points."""
     for wname, (wl, n_layers) in WORKLOADS.items():
         for n in (2, 4):
             sp_only = plan(n, M_PER_MACHINE, wl.heads)
             base = sp_step_latency(sp_only, wl, n_layers=n_layers,
-                                   guided=True)["t_step"]
-            rows.append(row(f"hybrid_sweep/{wname}/N{n}/sp_only",
-                            base * 1e6,
-                            f"Pu={sp_only.p_ulysses},Pr={sp_only.p_ring}"))
+                                   guided=True)
+            yield (wname, n, wl, n_layers, "sp_only",
+                   {"cfg": 1, "pp": 1, "p_ulysses": sp_only.p_ulysses,
+                    "p_ring": sp_only.p_ring}, base, base)
             plans = {
                 "cfg": dict(cfg_parallel=True, pp=1),
                 "cfg_pp2": dict(cfg_parallel=True, pp=2),
@@ -58,10 +58,46 @@ def run() -> list[str]:
             for pname, kw in plans.items():
                 h = plan_hybrid(n, M_PER_MACHINE, wl.heads,
                                 n_layers=n_layers, **kw)
-                t = hybrid_step_latency(h, wl, n_layers=n_layers,
-                                        guided=True)["t_step"]
-                rows.append(row(
-                    f"hybrid_sweep/{wname}/N{n}/{pname}", t * 1e6,
-                    f"cfg={h.cfg},pp={h.pp},Pu={h.sp.p_ulysses},"
-                    f"Pr={h.sp.p_ring},speedup={base / t:.2f}x"))
+                pred = hybrid_step_latency(h, wl, n_layers=n_layers,
+                                           guided=True)
+                yield (wname, n, wl, n_layers, pname,
+                       {"cfg": h.cfg, "pp": h.pp, "p_ulysses": h.sp.p_ulysses,
+                        "p_ring": h.sp.p_ring}, pred, base)
+
+
+def run() -> list[str]:
+    rows = []
+    for wname, n, wl, n_layers, pname, pl, pred, base in _sweep():
+        if pname == "sp_only":
+            rows.append(row(f"hybrid_sweep/{wname}/N{n}/sp_only",
+                            pred["t_step"] * 1e6,
+                            f"Pu={pl['p_ulysses']},Pr={pl['p_ring']}"))
+        else:
+            rows.append(row(
+                f"hybrid_sweep/{wname}/N{n}/{pname}", pred["t_step"] * 1e6,
+                f"cfg={pl['cfg']},pp={pl['pp']},Pu={pl['p_ulysses']},"
+                f"Pr={pl['p_ring']},speedup={base['t_step'] / pred['t_step']:.2f}x"))
     return rows
+
+
+def records() -> list[dict]:
+    """Structured trajectory records for BENCH_hybrid_sweep.json: one entry
+    per swept configuration, pairing the config with the comm-model
+    prediction breakdown.  ``measured_step_us`` is null on this CPU
+    container — the field exists so multi-machine runs can fill it in and
+    the ROADMAP calibration item has a fit target."""
+    out = []
+    for wname, n, wl, n_layers, pname, pl, pred, _ in _sweep():
+        out.append({
+            "name": f"hybrid_sweep/{wname}/N{n}/{pname}",
+            "workload": {"batch": wl.batch, "seq": wl.seq, "heads": wl.heads,
+                         "head_dim": wl.head_dim, "n_layers": n_layers},
+            "n_machines": n,
+            "m_per_machine": M_PER_MACHINE,
+            "plan": pl,
+            "predicted_step_us": pred["t_step"] * 1e6,
+            "predicted_breakdown": {k: v for k, v in pred.items()
+                                    if k != "t_step"},
+            "measured_step_us": None,
+        })
+    return out

@@ -4,13 +4,63 @@ Prints ``name,us_per_call,derived`` CSV.  See each module's docstring for
 the figure it regenerates and the derivation caveats (this container is
 CPU-only; multi-pod numbers come from the calibrated analytical model and
 the dry-run roofline, not wall clocks).
+
+Besides the CSV, every module run also lands in a ``BENCH_<module>.json``
+trajectory record (``--out-dir``, default cwd): the module's rows (step
+latencies — measured for device-local benches, model-predicted for
+multi-pod sweeps) plus, for modules exposing ``records()``, structured
+per-config records pairing each configuration with its comm-model
+prediction breakdown.  These files are the calibration corpus the ROADMAP
+"fit NetworkModel to BENCH_*.json" item consumes: the JSON keeps the full
+(config -> prediction) mapping that the flat CSV derives away.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
+import pathlib
 import sys
+import time
 
 
-def main() -> None:
+def parse_row(line: str) -> dict:
+    """Inverse of common.row: 'name,us,derived' (derived may hold commas).
+    Non-finite latencies (error rows) become null so the JSON stays valid."""
+    name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+    try:
+        us_val: float | None = float(us)
+        if not math.isfinite(us_val):
+            us_val = None
+    except ValueError:
+        us_val = None
+    return {"name": name, "us": us_val, "derived": derived}
+
+
+def write_bench_json(out_dir: pathlib.Path, module_name: str,
+                     rows: list[str], records: list[dict] | None) -> pathlib.Path:
+    """Write one BENCH_<module>.json trajectory record."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{module_name}.json"
+    payload = {
+        "schema": "bench.v1",
+        "module": module_name,
+        "generated_at": time.time(),
+        "rows": [parse_row(r) for r in rows],
+        "records": records or [],
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    return path
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", type=pathlib.Path, default=pathlib.Path("."),
+                    help="directory for BENCH_*.json trajectory records")
+    ap.add_argument("--no-json", action="store_true",
+                    help="CSV to stdout only; write no BENCH_*.json")
+    args = ap.parse_args(argv)
+
     from . import (
         ablation,
         comm_volume,
@@ -37,8 +87,14 @@ def main() -> None:
     for title, mod in modules.items():
         print(f"# --- {title} ---", file=sys.stderr)
         try:
-            for line in mod.run():
+            rows = list(mod.run())
+            for line in rows:
                 print(line)
+            if not args.no_json:
+                recs = getattr(mod, "records", None)
+                path = write_bench_json(args.out_dir, mod.__name__.split(".")[-1],
+                                        rows, recs() if recs else None)
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # keep the harness running, flag failure
             print(f"{title},NaN,ERROR:{type(e).__name__}:{e}")
             ok = False

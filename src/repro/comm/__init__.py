@@ -1,0 +1,48 @@
+"""One-sided communication subsystem (DESIGN.md §8).
+
+NVSHMEM-style put/signal/wait semantics over XLA collectives:
+
+  channel — ``Channel`` / ``InFlight`` / ``fence`` / ``pin``: the put is a
+            ``lax.ppermute`` (collective-permute DMA), the wait an
+            ``optimization_barrier`` ordering point.
+  stream  — staged transfer programs composed from channels: ring shifts,
+            distance-k torus hops, the decomposed all-to-all, and the
+            displaced pipeline's pipe-axis stage hand-off.
+  trace   — records the intended overlap schedule at trace time and
+            validates it against compiled HLO (collective-permute
+            placement + dependency-level overlap admission).
+
+core/{ring,torus,collectives}.py and models/dit.py route all their
+transfers through this package; this package imports nothing from core,
+so the dependency points one way.
+"""
+from .channel import Channel, InFlight, fence, pin, ring_perm_of, shift_perm
+from .stream import (
+    Stream,
+    pipe_handoff,
+    ring_shift,
+    staged_all_to_all,
+    staged_ungroup,
+    torus_hop,
+)
+from .trace import ScheduleTrace, TransferEvent, ValidationReport, record, validate
+
+__all__ = [
+    "Channel",
+    "InFlight",
+    "ScheduleTrace",
+    "Stream",
+    "TransferEvent",
+    "ValidationReport",
+    "fence",
+    "pin",
+    "pipe_handoff",
+    "record",
+    "ring_perm_of",
+    "ring_shift",
+    "shift_perm",
+    "staged_all_to_all",
+    "staged_ungroup",
+    "torus_hop",
+    "validate",
+]

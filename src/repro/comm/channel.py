@@ -1,0 +1,133 @@
+"""One-sided channel primitive (DESIGN.md §8): NVSHMEM put/signal/wait
+semantics expressed in XLA terms.
+
+The paper's runtime moves every tensor with one-sided NVSHMEM puts: the
+sender writes straight into the receiver's buffer (no rendezvous), sets a
+signal flag, and the receiver spin-waits on the flag only when it actually
+needs the data — so the transfer rides a communication stream while SMs
+keep computing.  On TPU-style backends the same three verbs map onto XLA
+primitives:
+
+    put     -> ``lax.ppermute``: lowered to collective-permute-start/done
+               executed by the DMA engines; the latency-hiding scheduler
+               hoists the start above independent compute, which is the
+               moral equivalent of issuing the put on a comm stream.
+               (The Pallas lowering is ``pltpu.make_async_remote_copy`` +
+               ``rdma.start()``; this layer stays at the XLA level.)
+    signal  -> the data dependency on the permute's result: XLA's done op
+               plays the role of the flag write, so no separate flag
+               tensor is materialised.
+    wait    -> ``optimization_barrier``: pins *when* the received buffer
+               may be consumed relative to other live values, without
+               making the transfer itself depend on them — the receiver-
+               side spin-wait, minus the spinning.
+
+A ``Channel`` is a fixed (mesh axes, permutation) route — the double
+buffer: every ``put`` returns an ``InFlight`` handle whose payload is the
+receive buffer, and the caller decides when to ``wait`` on it.  Streams
+(stream.py) compose channels into staged transfer programs; trace.py
+records every put and validates the intended overlap against compiled HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax import lax
+
+from ..compat import optimization_barrier
+from . import trace as _trace
+
+__all__ = ["Channel", "InFlight", "fence", "pin", "ring_perm_of",
+           "shift_perm"]
+
+
+def shift_perm(size: int, shift: int = 1) -> tuple[tuple[int, int], ...]:
+    """Rotation permutation: rank r -> (r + shift) % size."""
+    return tuple((r, (r + shift) % size) for r in range(size))
+
+
+def ring_perm_of(layout: Any, shift: int = 1) -> tuple[tuple[int, int], ...]:
+    """The layout's intra-ring rotation as a hashable perm table."""
+    return tuple(layout.ring_perm(shift))
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """A fixed one-sided route: ``put`` moves tensors one hop along
+    ``perm`` over the named mesh ``axes``.
+
+    Channels are cheap value objects — construct them per schedule stage;
+    the name only matters for trace/debug output.
+    """
+
+    axes: tuple[str, ...]
+    perm: tuple[tuple[int, int], ...]
+    name: str = "chan"
+    stream: str = ""  # owning Stream name (trace bookkeeping)
+    stage: int = 0  # stage index within the stream program
+
+    def put(self, *tensors: jax.Array, overlaps: str = "") -> "InFlight":
+        """Issue the one-sided transfer of ``tensors`` (start the DMA).
+
+        Multiple tensors ride the same route in one put (K and V travel
+        together).  ``overlaps`` names the compute this transfer is meant
+        to hide behind; trace validation asserts the compiled HLO admits
+        it.  The returned handle's payload is the *received* buffer — in
+        SPMD every rank is simultaneously the sender and the receiver of
+        its neighbour's put.
+        """
+        perm = list(self.perm)
+        out = tuple(lax.ppermute(t, self.axes, perm=perm) for t in tensors)
+        _trace.emit(_trace.TransferEvent(
+            stream=self.stream, channel=self.name, stage=self.stage,
+            axes=tuple(self.axes), perm=tuple(self.perm),
+            shape=tuple(tensors[0].shape), n_tensors=len(tensors),
+            overlaps=overlaps))
+        return InFlight(channel=self, payload=out)
+
+
+@dataclasses.dataclass(frozen=True)
+class InFlight:
+    """Handle to a put in flight; ``payload`` is the receive buffer."""
+
+    channel: Channel
+    payload: tuple[jax.Array, ...]
+
+    def wait(self, *deps: jax.Array) -> Any:
+        """Signal-wait: deliver the buffer, ordered after ``deps``.
+
+        With no deps this is a plain delivery (the data dependency is the
+        signal).  With deps, the received tensors and the deps are fenced
+        together so the consumer cannot be scheduled before the deps
+        finish — while the transfer start stays independent and hoistable.
+        Returns the payload (unpacked when it is a single tensor); with
+        deps, returns ``(payload..., deps...)`` all fenced.
+        """
+        if not deps:
+            return self.payload[0] if len(self.payload) == 1 else self.payload
+        vals, deps_out = fence(self.payload, deps)
+        if len(vals) == 1:
+            return (vals[0], *deps_out)
+        return (*vals, *deps_out)
+
+
+def fence(tensors: Sequence[jax.Array],
+          deps: Sequence[jax.Array]) -> tuple[tuple, tuple]:
+    """Joint ordering point: gate ``tensors`` (received or resident
+    buffers) on ``deps`` so compute consuming them cannot start before the
+    deps complete — the consumer-side wait of the signal protocol.  Values
+    that do not pass through the fence (e.g. the next put) stay
+    independent and keep overlapping.  Returns (tensors, deps) pinned.
+    """
+    out = optimization_barrier(tuple(tensors) + tuple(deps))
+    n = len(tuple(tensors))
+    return out[:n], out[n:]
+
+
+def pin(xs: Sequence[jax.Array]) -> tuple:
+    """Serialise a value chain (e.g. an accumulator) across schedule steps
+    so only O(1) intermediates are live — the quiet counterpart of fence.
+    """
+    return optimization_barrier(tuple(xs))

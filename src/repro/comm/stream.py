@@ -1,0 +1,188 @@
+"""Staged transfer programs over one-sided channels (DESIGN.md §8).
+
+A ``Stream`` is the comm-side analogue of a CUDA/NVSHMEM stream: an
+ordered sequence of channel stages making up one logical transfer program.
+Each stage opens a channel (a fixed route), puts its tensors, and the
+stage index is recorded so trace validation can reason about the program
+shape.  The staged programs the SP schedules need are provided here:
+
+  ring_shift          — one intra-ring rotation (Ring Attention's KV hop)
+  torus_hop           — distance-k hop inside the Ulysses group (§4.3
+                        stage k of the decomposed all-to-all)
+  staged_all_to_all   — the full P_u-stage decomposition with the
+                        stationary diagonal chunk (grouped_all_to_all)
+  staged_ungroup      — its inverse (the Push-O / fourth all-to-all)
+  pipe_handoff        — the pipe-axis stage boundary transfer of the
+                        displaced patch pipeline (models/dit.py)
+
+Everything here is layout-agnostic: ``layout`` ducks as any object with
+``axes``, ``p_ulysses``, ``my_coords()``, ``ring_perm(k)`` and
+``ulysses_stage_perm(k)`` (core/collectives.GroupLayout in practice; the
+duck-typing keeps this package import-free of core so core can build on
+it without cycles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from .channel import Channel, InFlight, shift_perm
+
+__all__ = ["Stream", "ring_shift", "torus_hop", "staged_all_to_all",
+           "staged_ungroup", "pipe_handoff"]
+
+
+@dataclasses.dataclass
+class Stream:
+    """An ordered program of channel transfers.
+
+    ``channel`` mints a Channel bound to this stream at the current stage;
+    ``next_stage`` advances the program counter.  Streams are trace-time
+    bookkeeping only — they add no ops of their own.
+    """
+
+    name: str
+    stage: int = 0
+
+    def channel(self, axes, perm, label: str = "") -> Channel:
+        return Channel(axes=tuple(axes), perm=tuple(perm),
+                       name=f"{self.name}.{label}" if label else self.name,
+                       stream=self.name, stage=self.stage)
+
+    def next_stage(self) -> int:
+        self.stage += 1
+        return self.stage
+
+    # -- staged programs as stream methods (each advances the stage) ------
+    def put(self, axes, perm, *tensors, label: str = "",
+            overlaps: str = "") -> InFlight:
+        fut = self.channel(axes, perm, label).put(*tensors, overlaps=overlaps)
+        self.next_stage()
+        return fut
+
+
+def ring_shift(layout: Any, *tensors: jax.Array, shift: int = 1,
+               stream: Stream | None = None,
+               overlaps: str = "") -> InFlight:
+    """One rotation inside each Ring group (same u): the KV hop of Ring
+    Attention.  Returns the in-flight handle — the caller owns the wait."""
+    stream = stream or Stream("ring")
+    return stream.put(layout.axes, layout.ring_perm(shift), *tensors,
+                      label=f"shift{shift}", overlaps=overlaps)
+
+
+def torus_hop(layout: Any, k: int, *tensors: jax.Array,
+              stream: Stream | None = None,
+              overlaps: str = "") -> InFlight:
+    """Distance-k hop inside each Ulysses group (same r): stage k of the
+    §4.3 decomposed all-to-all."""
+    stream = stream or Stream("torus")
+    return stream.put(layout.axes, layout.ulysses_stage_perm(k), *tensors,
+                      label=f"hop{k}", overlaps=overlaps)
+
+
+def _dyn_set(buf: jax.Array, idx, val: jax.Array) -> jax.Array:
+    return lax.dynamic_update_slice_in_dim(buf, val[None], idx, axis=0)
+
+
+def staged_all_to_all(
+    x: jax.Array,
+    layout: Any,
+    *,
+    split_axis: int,
+    stream: Stream | None = None,
+) -> jax.Array:
+    """All-to-all restricted to Ulysses groups, as P_u - 1 channel stages.
+
+    Splits ``x`` into P_u chunks along ``split_axis``; chunk j is put to
+    ulysses-peer j.  The diagonal chunk (j == my u) is stationary (§4.3)
+    and never touches the wire.  Returns chunks stacked on a new leading
+    axis in *source*-u order: ``out[j]`` = the chunk peer j produced for
+    me.  Every stage's put is independent of every other stage's — the
+    whole program can be in flight at once, which is what lets Torus
+    interleave these stages with attention compute.
+    """
+    stream = stream or Stream("a2a")
+    p_u = layout.p_ulysses
+    chunks = jnp.stack(jnp.split(x, p_u, axis=split_axis), axis=0)
+    if p_u == 1:
+        return chunks
+    u, _ = layout.my_coords()
+    out = jnp.zeros_like(chunks)
+    out = _dyn_set(out, u, jnp.take(chunks, u, axis=0))
+    for k in range(1, p_u):
+        # I put my chunk destined for peer (u + k); peer (u - k) puts mine.
+        send = jnp.take(chunks, (u + k) % p_u, axis=0)
+        recv = torus_hop(layout, k, send, stream=stream).wait()
+        out = _dyn_set(out, (u - k) % p_u, recv)
+    return out
+
+
+def staged_ungroup(
+    stacked: jax.Array,
+    layout: Any,
+    *,
+    concat_axis: int,
+    stream: Stream | None = None,
+) -> jax.Array:
+    """Inverse program: put ``stacked[j]`` back to ulysses-peer j and
+    concatenate the received chunks along ``concat_axis`` (the fourth
+    all-to-all of Ulysses attention / Torus Push-O; diagonal stays put)."""
+    stream = stream or Stream("a2a.inv")
+    p_u = layout.p_ulysses
+    if p_u == 1:
+        return jnp.squeeze(stacked, axis=0)
+    u, _ = layout.my_coords()
+    out = jnp.zeros_like(stacked)
+    out = _dyn_set(out, u, jnp.take(stacked, u, axis=0))
+    for k in range(1, p_u):
+        send = jnp.take(stacked, (u + k) % p_u, axis=0)
+        recv = torus_hop(layout, k, send, stream=stream,
+                         overlaps="next-layer compute").wait()
+        out = _dyn_set(out, (u - k) % p_u, recv)
+    return jnp.concatenate(list(out), axis=concat_axis)
+
+
+def pipe_handoff(
+    x: jax.Array,
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    *,
+    shift: int = 1,
+    batch_axes: tuple[str, ...] | None = None,
+    stream: Stream | None = None,
+) -> jax.Array:
+    """Stage-boundary hand-off of the displaced patch pipeline: rotate the
+    activation one stage forward along the pipe ``axis``.
+
+    This is the transfer that replaces the GSPMD-implicit stage hand-off
+    (ROADMAP item): an explicit collective-permute over the pipe axis
+    carrying exactly the bytes the real pipeline moves per boundary, so
+    (a) the HLO names the transfer and trace.py can validate that patch
+    (p+1)'s hand-off overlaps patch p's stage compute, and (b) the
+    emulation pays the wire cost it claims.  In the single-program
+    emulation the activation is replicated over the pipe axis, so the
+    rotation is value-preserving — the multi-device schedule it stands in
+    for is documented in DESIGN.md §8.
+
+    Must be called OUTSIDE any shard_map (it opens its own over ``axis``).
+    """
+    stream = stream or Stream("pipe")
+    pp = mesh.shape[axis]
+    if pp == 1:
+        return x
+    ch = stream.channel((axis,), shift_perm(pp, shift), f"handoff{stream.stage}")
+    stream.next_stage()
+    spec = P(batch_axes) if batch_axes else P()
+
+    def body(xs):
+        return ch.put(xs, overlaps="stage compute").wait()
+
+    return shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                     check_vma=False)(x)

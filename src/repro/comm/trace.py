@@ -1,0 +1,359 @@
+"""Schedule tracing and compiled-HLO overlap validation (DESIGN.md §8).
+
+The one-sided channel layer (channel.py / stream.py) *intends* a specific
+overlap schedule: every ``Channel.put`` is a transfer whose latency should
+hide behind some independent compute.  On real NVSHMEM hardware that
+intent is enforced at runtime by stream ordering; under XLA it is realised
+by the latency-hiding scheduler, which the channel layer can only steer
+(issue the permute early, fence the consumer).  This module closes the
+loop: it records the intended schedule at trace time and then checks the
+*compiled* HLO actually admits it.
+
+Two validation levels, matching what the backend exposes:
+
+  * async backends (TPU): ``collective-permute-start``/``-done`` pairs —
+    overlap is validated directly by requiring compute instructions
+    scheduled between start and done.
+  * sync backends (CPU test mesh): a single ``collective-permute`` op —
+    overlap is validated at the dependency level: there must exist compute
+    instructions in the same computation that neither feed the permute nor
+    consume its result, i.e. the program as compiled leaves the scheduler
+    free to run them concurrently with the wire transfer.
+
+Events are matched to HLO ops through ``source_target_pairs``: the channel
+knows its (axes, perm) and the validator expands that to flat device-id
+pairs for the concrete mesh — no reliance on op names or metadata.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Iterator
+
+__all__ = [
+    "TransferEvent",
+    "ScheduleTrace",
+    "record",
+    "emit",
+    "HloInstr",
+    "parse_computations",
+    "collective_permutes",
+    "expected_pairs",
+    "independent_compute",
+    "validate",
+    "ValidationReport",
+]
+
+
+# ---------------------------------------------------------------------------
+# schedule recording (trace-time side channel, active only under record())
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransferEvent:
+    """One intended transfer: a ``Channel.put`` observed at trace time."""
+
+    stream: str  # owning Stream (or "" for a bare channel)
+    channel: str  # channel name, e.g. "torus.pullq1"
+    stage: int  # stage index within the stream program
+    axes: tuple[str, ...]  # mesh axes the permute runs over
+    perm: tuple[tuple[int, int], ...]  # logical (src, dst) pairs on ``axes``
+    shape: tuple[int, ...]  # per-device payload shape (first tensor)
+    n_tensors: int  # tensors moved by this put (k and v travel together)
+    overlaps: str  # label of the compute this transfer should hide behind
+
+
+@dataclasses.dataclass
+class ScheduleTrace:
+    """The recorded intent of one traced program."""
+
+    name: str
+    events: list[TransferEvent] = dataclasses.field(default_factory=list)
+
+    def by_perm(self) -> dict[tuple, list[TransferEvent]]:
+        """Group events by (axes, perm) — the key that maps to HLO pairs."""
+        out: dict[tuple, list[TransferEvent]] = {}
+        for e in self.events:
+            out.setdefault((e.axes, e.perm), []).append(e)
+        return out
+
+    @property
+    def overlap_events(self) -> list[TransferEvent]:
+        return [e for e in self.events if e.overlaps]
+
+
+_ACTIVE: contextvars.ContextVar[ScheduleTrace | None] = contextvars.ContextVar(
+    "repro_comm_trace", default=None)
+
+
+@contextlib.contextmanager
+def record(name: str) -> Iterator[ScheduleTrace]:
+    """Record every Channel.put issued while tracing under this context."""
+    tr = ScheduleTrace(name)
+    tok = _ACTIVE.set(tr)
+    try:
+        yield tr
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def emit(event: TransferEvent) -> None:
+    """Called by Channel.put; no-op unless a trace is being recorded."""
+    tr = _ACTIVE.get()
+    if tr is not None:
+        tr.events.append(event)
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing (text-level; the stable surface across jax versions)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HloInstr:
+    name: str  # %foo.1
+    op: str  # collective-permute | fusion | dot | ...
+    operands: tuple[str, ...]  # operand instruction names
+    computation: str  # enclosing computation name
+    index: int  # position within the computation (schedule order)
+    line: str  # raw text (for pair extraction etc.)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*[^=]*?\s([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[HloInstr]]:
+    """Split HLO module text into computations -> instruction lists.
+
+    Text-level parsing is deliberate: it works on ``compile().as_text()``
+    from every backend and keeps this module free of XLA client APIs.
+    """
+    comps: dict[str, list[HloInstr]] = {}
+    current: str | None = None
+    for raw in hlo_text.splitlines():
+        stripped = raw.strip()
+        # computation header: '%name (params...) -> type {'.  Params may be
+        # tuple-typed (while/fori bodies) and so contain nested parens — the
+        # greedy '\(.*\)' spans them; instruction lines are excluded by the
+        # '=' guard and by not ending in '{'.
+        head = re.match(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*\{$",
+                        stripped)
+        if head and "=" not in stripped.split("(")[0]:
+            current = head.group(1)
+            comps[current] = []
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(raw)
+        if not m:
+            continue
+        name, op = m.group(1), m.group(2)
+        # operands: %refs on the line after the op's open paren, minus self
+        after = raw[m.end():]
+        # cut trailing attribute blobs that may contain %-free ids only
+        operands = tuple(o for o in _OPERAND_RE.findall(after) if o != name)
+        comps[current].append(
+            HloInstr(name=name, op=op, operands=operands,
+                     computation=current, index=len(comps[current]), line=raw))
+    return comps
+
+
+def _pairs_of(line: str) -> frozenset[tuple[int, int]] | None:
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    return frozenset((int(a), int(b)) for a, b in _PAIR_RE.findall(m.group(1)))
+
+
+def collective_permutes(hlo_text: str) -> list[HloInstr]:
+    """All collective-permute(-start) instructions in the module."""
+    out = []
+    for instrs in parse_computations(hlo_text).values():
+        for ins in instrs:
+            if ins.op in ("collective-permute", "collective-permute-start"):
+                out.append(ins)
+    return out
+
+
+def expected_pairs(mesh, axes: tuple[str, ...],
+                   perm: tuple[tuple[int, int], ...]) -> frozenset[tuple[int, int]]:
+    """Expand a logical perm over ``axes`` to flat device-id pairs.
+
+    ``lax.ppermute`` flattens multi-axis ranks major-first in the given
+    axes order; every assignment of the remaining mesh axes replicates the
+    perm.  This mirrors exactly how XLA emits source_target_pairs.
+    """
+    import numpy as np
+
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    names = list(mesh.axis_names)
+    sub_sizes = [mesh.shape[a] for a in axes]
+    other = [a for a in names if a not in axes]
+    other_sizes = [mesh.shape[a] for a in other]
+
+    def coords(flat: int, sizes: list[int]) -> list[int]:
+        out = []
+        for s in reversed(sizes):
+            out.append(flat % s)
+            flat //= s
+        return list(reversed(out))
+
+    pairs = set()
+    n_other = 1
+    for s in other_sizes:
+        n_other *= s
+    for oflat in range(n_other):
+        oc = dict(zip(other, coords(oflat, other_sizes)))
+        for (src, dst) in perm:
+            sc = dict(zip(axes, coords(src, sub_sizes)))
+            dc = dict(zip(axes, coords(dst, sub_sizes)))
+            s_idx = tuple((sc | oc)[a] for a in names)
+            d_idx = tuple((dc | oc)[a] for a in names)
+            pairs.add((int(ids[s_idx]), int(ids[d_idx])))
+    return frozenset(pairs)
+
+
+# ---------------------------------------------------------------------------
+# overlap analysis
+# ---------------------------------------------------------------------------
+
+_COMPUTE_OPS = ("fusion", "dot", "convolution", "reduce", "exponential")
+
+
+def _reach(instrs: list[HloInstr]) -> tuple[dict, dict]:
+    """(ancestors, descendants) name->set maps within one computation."""
+    by_name = {i.name: i for i in instrs}
+    anc: dict[str, set[str]] = {}
+
+    def ancestors(n: str) -> set[str]:
+        if n in anc:
+            return anc[n]
+        anc[n] = set()  # cycle guard (HLO is a DAG; guard anyway)
+        acc: set[str] = set()
+        for o in by_name[n].operands if n in by_name else ():
+            if o in by_name:
+                acc.add(o)
+                acc |= ancestors(o)
+        anc[n] = acc
+        return acc
+
+    desc: dict[str, set[str]] = {i.name: set() for i in instrs}
+    for i in instrs:
+        for a in ancestors(i.name):
+            desc[a].add(i.name)
+    return anc, desc
+
+
+def independent_compute(instrs: list[HloInstr], permute: HloInstr) -> list[HloInstr]:
+    """Compute instructions with no dependence either way on ``permute`` —
+    exactly the set a latency-hiding scheduler may run during the wire
+    transfer."""
+    anc, desc = _reach(instrs)
+    excl = anc.get(permute.name, set()) | desc.get(permute.name, set())
+    excl.add(permute.name)
+    return [i for i in instrs
+            if i.name not in excl and i.op in _COMPUTE_OPS]
+
+
+def _between_start_done(instrs: list[HloInstr], start: HloInstr) -> list[HloInstr]:
+    """Compute instructions scheduled between an async start and its done."""
+    done_idx = None
+    for i in instrs:
+        if i.op == "collective-permute-done" and start.name in i.operands:
+            done_idx = i.index
+            break
+    if done_idx is None:
+        return []
+    return [i for i in instrs
+            if start.index < i.index < done_idx and i.op in _COMPUTE_OPS]
+
+
+# ---------------------------------------------------------------------------
+# validation entry point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ValidationReport:
+    trace: str
+    hlo_permutes: int
+    matched_groups: int
+    overlapped: list[str]  # channel names whose overlap intent is satisfied
+    failures: list[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def summary(self) -> str:
+        status = "OK" if self.ok else "FAIL"
+        lines = [f"comm.trace[{self.trace}] {status}: "
+                 f"{self.hlo_permutes} collective-permutes, "
+                 f"{self.matched_groups} schedule groups matched, "
+                 f"{len(self.overlapped)} overlap intents validated"]
+        lines += [f"  FAIL: {f}" for f in self.failures]
+        return "\n".join(lines)
+
+
+def validate(trace: ScheduleTrace, hlo_text: str, mesh,
+             *, require_overlap: bool = True) -> ValidationReport:
+    """Check the compiled HLO against the recorded schedule.
+
+    For every (axes, perm) group of recorded puts there must be at least
+    one collective-permute with the expanded device pairs (XLA may merge
+    same-perm puts — k and v travel in one combined op — so counts are
+    matched as >= 1 per group, not exactly).  For every put that declared
+    an ``overlaps`` intent, the matching permute must admit overlap: async
+    start/done with compute between them, or (sync backends) independent
+    compute in the same computation.
+    """
+    comps = parse_computations(hlo_text)
+    permutes = collective_permutes(hlo_text)
+    failures: list[str] = []
+    overlapped: list[str] = []
+    groups = trace.by_perm()
+    for (axes, perm), events in groups.items():
+        want = expected_pairs(mesh, axes, perm)
+        matches = [p for p in permutes if _pairs_of(p.line) == want]
+        if not matches:
+            failures.append(
+                f"{events[0].channel}: no collective-permute with pairs "
+                f"{sorted(want)} in compiled HLO")
+            continue
+        for e in events:
+            if not e.overlaps:
+                continue
+            ok = False
+            for p in matches:
+                instrs = comps[p.computation]
+                if p.op == "collective-permute-start":
+                    ok = bool(_between_start_done(instrs, p))
+                else:
+                    ok = bool(independent_compute(instrs, p))
+                if ok:
+                    break
+            if ok:
+                if e.channel not in overlapped:
+                    overlapped.append(e.channel)
+            else:
+                failures.append(
+                    f"{e.channel} (stage {e.stage}): transfer cannot overlap "
+                    f"'{e.overlaps}' — no independent compute in "
+                    f"{matches[0].computation}")
+    if require_overlap and trace.overlap_events and not overlapped:
+        failures.append("no overlap intent could be validated")
+    return ValidationReport(
+        trace=trace.name,
+        hlo_permutes=len(permutes),
+        matched_groups=len(groups) - sum(
+            1 for f in failures if "no collective-permute" in f),
+        overlapped=overlapped,
+        failures=failures,
+    )

@@ -2,13 +2,16 @@
 
 The paper implements its communication with one-sided NVSHMEM put/get so
 that (a) no per-transfer sender/receiver rendezvous happens and (b) no SM
-cycles are burnt on communication kernels.  The TPU-idiomatic equivalent is
-``lax.ppermute``: XLA lowers it to ``collective-permute-start/done`` pairs
-executed by the ICI DMA engines (no core cycles) and its latency-hiding
-scheduler hoists the ``start`` above independent compute — precisely the
-overlap NVSHMEM gives the paper.  Every schedule here is therefore built
-from ppermute over a *flattened* SP axis, with the paper's logical
-(P_u × P_r) factorisation expressed as plain rank arithmetic.
+cycles are burnt on communication kernels.  The TPU-idiomatic equivalent
+lives in ``repro.comm`` (DESIGN.md §8): channels whose ``put`` is a
+``lax.ppermute`` — lowered to ``collective-permute-start/done`` pairs
+executed by the ICI DMA engines (no core cycles), with XLA's latency-hiding
+scheduler hoisting the ``start`` above independent compute — precisely the
+overlap NVSHMEM gives the paper.  Every schedule is therefore built from
+channel puts over a *flattened* SP axis, with the paper's logical
+(P_u × P_r) factorisation expressed as plain rank arithmetic.  This module
+owns the layout bookkeeping (GroupLayout) and the all-to-all entry points;
+the staged transfer programs themselves are ``repro.comm.stream``'s.
 
 Logical layout (see planner.py):
   flat rank p in [0, P_u * P_r) over the mesh SP axes (major axis first).
@@ -21,11 +24,12 @@ Logical layout (see planner.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from ..comm import staged_all_to_all, staged_ungroup
 
 AxisNames = tuple[str, ...]
 
@@ -111,12 +115,10 @@ class GroupLayout:
         return ranks * shard_len
 
 
-def ppermute(x, axes: AxisNames, perm: Sequence[tuple[int, int]]):
-    return lax.ppermute(x, axes, perm=list(perm))
-
-
 # ---------------------------------------------------------------------------
-# Grouped all-to-all via staged ppermute (the paper's one-sided decomposition)
+# Grouped all-to-all via staged channel puts (the one-sided decomposition);
+# the transfer programs live in repro.comm.stream, this is the core-facing
+# entry point.
 # ---------------------------------------------------------------------------
 
 def grouped_all_to_all(
@@ -133,28 +135,11 @@ def grouped_all_to_all(
     new leading axis ordered by *source* ulysses coordinate:
     ``out[j] = chunk (destined for me) from peer with u = j``.
 
-    Implemented as P_u - 1 ppermute stages.  The diagonal chunk (j == my u)
-    is **stationary** — the paper's §4.3 observation — and never moves.
+    Implemented as P_u - 1 one-sided channel stages (comm.stream).  The
+    diagonal chunk (j == my u) is **stationary** — the paper's §4.3
+    observation — and never moves.
     """
-    p_u = layout.p_ulysses
-    chunks = jnp.stack(jnp.split(x, p_u, axis=split_axis), axis=0)  # [P_u, ...]
-    if p_u == 1:
-        return chunks
-    u, _ = layout.my_coords()
-    out = jnp.zeros_like(chunks)
-    # stationary diagonal chunk: x's chunk index u stays at out index u
-    mine = jnp.take(chunks, u, axis=0)
-    out = _dyn_set(out, u, mine)
-    for k in range(1, p_u):
-        # I send my chunk destined for peer (u + k); I receive from (u - k).
-        send = jnp.take(chunks, (u + k) % p_u, axis=0)
-        recv = ppermute(send, layout.axes, layout.ulysses_stage_perm(k))
-        out = _dyn_set(out, (u - k) % p_u, recv)
-    return out
-
-
-def _dyn_set(buf: jax.Array, idx, val: jax.Array) -> jax.Array:
-    return lax.dynamic_update_slice_in_dim(buf, val[None], idx, axis=0)
+    return staged_all_to_all(x, layout, split_axis=split_axis)
 
 
 def monolithic_all_to_all(
@@ -191,12 +176,4 @@ def ungroup_all_to_all(
             stacked, layout.axes, split_axis=0, concat_axis=0, tiled=True
         )
         return jnp.concatenate(list(moved), axis=concat_axis)
-    u, _ = layout.my_coords()
-    out = jnp.zeros_like(stacked)
-    out = _dyn_set(out, u, jnp.take(stacked, u, axis=0))
-    for k in range(1, p_u):
-        send = jnp.take(stacked, (u + k) % p_u, axis=0)
-        recv = ppermute(send, layout.axes, layout.ulysses_stage_perm(k))
-        out = _dyn_set(out, (u - k) % p_u, recv)
-    # out[j] now holds the chunk produced on peer j for me; order by j.
-    return jnp.concatenate(list(out), axis=concat_axis)
+    return staged_ungroup(stacked, layout, concat_axis=concat_axis)

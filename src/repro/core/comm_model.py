@@ -151,10 +151,11 @@ LATENT_CHANNELS = 64  # mirrors models/dit.py (velocity tensor channel dim)
 
 def cfg_recombine_volume(wl: LayerWorkload) -> float:
     """Elements each device exchanges for the CFG recombine, per sampler
-    step: half the guided velocity tensor (B·L·C with B the per-branch
-    batch).  This is the ONLY cross-branch traffic of cfg parallelism —
-    it is per *step*, not per layer, which is why the planner spends the
-    slow boundary on it first."""
+    step: one velocity tensor (B·L·C with B the per-branch batch) — the
+    weighted psum over k branches is a reduction, so the per-device volume
+    is independent of the guidance degree.  This is the ONLY cross-branch
+    traffic of cfg parallelism — it is per *step*, not per layer, which is
+    why the planner spends the slow boundary on it first."""
     return float(wl.batch * wl.seq * LATENT_CHANNELS)
 
 
@@ -176,14 +177,16 @@ def sp_step_latency(
     *,
     n_layers: int,
     guided: bool = True,
+    guidance_branches: int = 2,
     swift: bool = True,
 ) -> dict[str, float]:
     """Predicted per-sampler-step latency of pure SP serving: ``n_layers``
-    distributed attention layers (Torus overlap + one-sided sync), twice
-    when classifier-free guidance runs its two branches sequentially."""
+    distributed attention layers (Torus overlap + one-sided sync), times
+    the k guidance branches when classifier-free guidance runs them
+    sequentially."""
     lat = attention_layer_latency(
         plan, wl, net, swift=swift, overlap_inter=True, one_sided=True)
-    branches = 2 if guided else 1
+    branches = guidance_branches if guided else 1
     return {
         "t_step": branches * n_layers * lat["t_total"],
         "t_layer": lat["t_total"],
@@ -199,6 +202,7 @@ def hybrid_step_latency(
     *,
     n_layers: int,
     guided: bool = True,
+    guidance_branches: int = 2,
     num_patches: int | None = None,
     num_steps: int = 20,
     overlap_pp: bool = True,
@@ -225,7 +229,7 @@ def hybrid_step_latency(
     lat = attention_layer_latency(
         sub, wl, net, swift=sub.n_machines > 1,
         overlap_inter=True, one_sided=True)
-    branches = 2 if (guided and hplan.cfg == 1) else 1
+    branches = guidance_branches if (guided and hplan.cfg == 1) else 1
     t_layers = branches * (n_layers / hplan.pp) * lat["t_total"]
 
     b = net.bytes_per_elem
@@ -234,7 +238,7 @@ def hybrid_step_latency(
     exposed_pp = max(0.0, t_pp - t_layers) if overlap_pp else t_pp
     cfg_bw = net.inter_bw if hplan.cfg_inter else net.intra_bw
     t_cfg = 0.0
-    if guided and hplan.cfg == 2:
+    if guided and hplan.cfg >= 2:
         t_cfg = (cfg_recombine_volume(wl) * b / cfg_bw
                  + (net.inter_lat if hplan.cfg_inter else net.intra_lat))
     t_bubble = t_layers * (hplan.pp - 1) / (np_ * num_steps)

@@ -60,18 +60,26 @@ class PipelineConfig:
     ``warmup_steps`` — leading sampler steps run fully synchronous (no
                        staleness) to populate the per-layer KV state; must
                        be >= 1.
+    ``resync_every`` — staleness control (ROADMAP): after warmup, run one
+                       fully-synchronous re-sync step every this many
+                       sampler steps, bounding how far the displaced KV
+                       can drift from the fresh activations.  0 = never
+                       (PipeFusion's warmup-only refresh); 1 = every step
+                       synchronous (no staleness at all).
     ``pp_axis``      — mesh axis name holding the stages.
     """
 
     pp: int = 1
     num_patches: int = 0
     warmup_steps: int = 1
+    resync_every: int = 0
     pp_axis: str = "pipe"
 
     def __post_init__(self):
         assert self.pp >= 1, self
         assert self.num_patches >= 0, self
         assert self.warmup_steps >= 1, "first step must populate the KV state"
+        assert self.resync_every >= 0, self
 
     @property
     def patches(self) -> int:
@@ -80,6 +88,15 @@ class PipelineConfig:
     @property
     def enabled(self) -> bool:
         return self.pp > 1 or self.patches > 1
+
+    def warm_step(self, i: int) -> bool:
+        """Whether sampler step ``i`` runs fully synchronous: the warmup
+        prefix, plus every ``resync_every``-th step after it."""
+        if i < self.warmup_steps:
+            return True
+        if self.resync_every <= 0:
+            return False
+        return (i - self.warmup_steps + 1) % self.resync_every == 0
 
 
 class KVState(NamedTuple):
@@ -169,6 +186,25 @@ def displaced_attention(
     stale = attend_partial(q, k_stale.astype(q.dtype),
                            v_stale.astype(q.dtype), scale=scale)
     return finalize(merge(fresh, stale), dtype=q.dtype)
+
+
+def kv_drift(old: KVState, new: KVState, *, per_item: bool = False) -> jax.Array:
+    """Per-step KV staleness metric: RMS change of the per-layer KV state
+    across one sampler step, in units of the state's own RMS magnitude.
+
+    This is the quantity ``resync_every`` bounds — as sampling converges
+    ("inter-step latent similarity") it decays toward 0, and a serving
+    policy can trade quality vs latency per request by watching it.
+    Scalar by default; ``per_item`` keeps the batch axis ([B]) so each
+    batched request gets its own trajectory (a shared-batch aggregate
+    would let one fast-drifting request hide behind a stable one).
+    Finite even for an all-zero state.
+    """
+    axes = (0, 2, 3, 4) if per_item else None  # [L, B, T, H, D] -> [B]
+    num = (jnp.mean((new.k - old.k) ** 2, axis=axes)
+           + jnp.mean((new.v - old.v) ** 2, axis=axes))
+    den = jnp.mean(old.k ** 2, axis=axes) + jnp.mean(old.v ** 2, axis=axes)
+    return jnp.sqrt(num / jnp.maximum(den, 1e-12))
 
 
 def update_state_rows(state: KVState, k_new: jax.Array, v_new: jax.Array,

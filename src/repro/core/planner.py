@@ -99,11 +99,12 @@ class HybridPlan:
 
     The hybrid axes are ordered by how rarely they synchronise:
 
-      cfg — classifier-free-guidance parallelism (xDiT, arXiv:2411.01738):
-            the conditional / unconditional branches are independent full
-            forwards that recombine ONCE per sampler step (one psum-sized
-            exchange of the velocity).  Cheapest axis; placed across the
-            slow (inter-machine) boundary first.
+      cfg — classifier-free-guidance parallelism (xDiT, arXiv:2411.01738),
+            generalised to guidance degree k (negative prompts /
+            multi-conditioning stacks): the k branches are independent
+            full forwards that recombine ONCE per sampler step (one
+            psum-sized weighted sum of the velocity).  Cheapest axis;
+            placed across the slow (inter-machine) boundary first.
       pp  — patch-level pipeline parallelism (PipeFusion): stages exchange
             one patch's activations per micro-step, once per layer-group
             rather than per layer.  Second-cheapest; also prefers the slow
@@ -113,7 +114,7 @@ class HybridPlan:
             (machines × chips) sub-mesh.
     """
 
-    cfg: int  # 1 (sequential CFG) or 2 (parallel branches)
+    cfg: int  # 1 (sequential CFG) or k >= 2 (parallel guidance branches)
     pp: int  # pipeline stages
     sp: SPPlan  # SP factorisation of the remaining devices
     n_machines: int  # N of the full cluster
@@ -136,7 +137,7 @@ class HybridPlan:
         return self.pp_machines > 1
 
     def validate(self) -> None:
-        assert self.cfg in (1, 2), self
+        assert self.cfg >= 1, self
         assert self.pp >= 1, self
         self.sp.validate()
         assert self.total_devices == self.n_machines * self.m_per_machine, self
@@ -161,6 +162,7 @@ def plan_hybrid(
     num_kv_heads: int | None = None,
     *,
     cfg_parallel: bool = False,
+    cfg_degree: int = 2,
     pp: int = 1,
     n_layers: int | None = None,
     swift: bool = True,
@@ -172,8 +174,12 @@ def plan_hybrid(
     least, see HybridPlan); whatever remains is planned by the paper's §4.2
     rule, so the SP sub-mesh keeps the TAS placement (Ulysses/Torus across
     the surviving machine boundary, Ring inside the machine).
+    ``cfg_degree`` is the guidance degree k consumed by the cfg axis when
+    ``cfg_parallel`` (k = 2 is the classic cond/uncond pair).
     """
-    cfg = 2 if cfg_parallel else 1
+    if cfg_parallel:
+        assert cfg_degree >= 2, cfg_degree
+    cfg = cfg_degree if cfg_parallel else 1
     total = n_machines * m_per_machine
     if total % (cfg * pp) != 0:
         raise ValueError(

@@ -5,8 +5,9 @@ several chunks) rotates around the Ring group in P_r steps while each device
 keeps its local Q and accumulates the online-softmax partial ``(O', l, m)``.
 
 The KV transfer for step s+1 is issued *before* the attention compute of
-step s (double buffering), so XLA's latency-hiding scheduler can overlap
-``collective-permute-start`` with the matmuls — the TPU equivalent of the
+step s (double buffering) through a one-sided ``repro.comm`` channel
+(DESIGN.md §8): the ``put`` starts the collective-permute DMA, the
+``fence`` is the receiver-side signal wait — the TPU equivalent of the
 paper's stream-ordered one-sided pulls (Algorithm 1 RINGATTN lines 2-7:
 pull next, compute current, wait).
 
@@ -24,9 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..compat import optimization_barrier
-
-from .collectives import GroupLayout, ppermute
+from ..comm import Stream, fence, ring_shift
+from .collectives import GroupLayout
 from .softmax import (MaskSpec, Partial, attend_partial,
                       attend_partial_blockwise, empty_partial, merge)
 
@@ -77,35 +77,34 @@ def ring_attention(
     if p_r == 1:
         return merge(acc, _attend(q, k, v, mask_for(my_r)))
 
-    perm = layout.ring_perm(1)
+    stream = Stream("ring")
 
     def body(s, carry):
         kc, vc, acc = carry
         # issue next-step transfer first (double buffer), compute current
-        kn = ppermute(kc, layout.axes, perm)
-        vn = ppermute(vc, layout.axes, perm)
+        nxt = ring_shift(layout, kc, vc, stream=stream,
+                         overlaps="ring attend")
         owner = (my_r - s) % p_r  # ring rank whose shard I currently hold
         acc = merge(acc, _attend(q, kc, vc, mask_for(owner)))
-        return kn, vn, acc
+        return (*nxt.payload, acc)
 
     if unroll:
         # unrolling lets XLA schedule permutes across step boundaries at the
-        # cost of HLO size; fori_loop keeps HLO O(1) in P_r.  The barrier on
+        # cost of HLO size; fori_loop keeps HLO O(1) in P_r.  The fence on
         # acc stops the scheduler from materializing every step's score
-        # matrix at once (permutes don't depend on acc, so they still
+        # matrix at once (puts don't pass through the fence, so they still
         # overlap with compute).
         kc, vc = k, v
         for s in range(p_r - 1):
-            # gate this step's attend inputs on the accumulator so only one
-            # step's score matrix is live; the next permute stays independent
-            kn = ppermute(kc, layout.axes, perm)
-            vn = ppermute(vc, layout.axes, perm)
-            gated = optimization_barrier((kc, vc) + tuple(acc))
-            kc_g, vc_g = gated[0], gated[1]
-            acc = Partial(*gated[2:])
+            # fence this step's attend inputs on the accumulator so only one
+            # step's score matrix is live; the next put stays independent
+            nxt = ring_shift(layout, kc, vc, stream=stream,
+                             overlaps="ring attend")
+            (kc_g, vc_g), accs = fence((kc, vc), tuple(acc))
+            acc = Partial(*accs)
             owner = (my_r - s) % p_r
             acc = merge(acc, _attend(q, kc_g, vc_g, mask_for(owner)))
-            kc, vc = kn, vn
+            kc, vc = nxt.payload
     else:
         kc, vc, acc = lax.fori_loop(0, p_r - 1, body, (k, v, acc))
     # last step: compute only, no further transfer (2(P-1)/P volume, §2.2)

@@ -31,26 +31,24 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..compat import optimization_barrier
-
-from .collectives import GroupLayout, ppermute
+from ..comm import Stream, fence, pin, torus_hop
+from .collectives import GroupLayout
 from .ring import ring_attention
 from .softmax import Partial, empty_partial, finalize, merge
 
 
 def _pin(acc: Partial) -> Partial:
-    """Schedule barrier on the accumulator chain."""
-    return Partial(*optimization_barrier(tuple(acc)))
+    """Serialise the accumulator chain across schedule steps."""
+    return Partial(*pin(tuple(acc)))
 
 
 def _gate(tensors: tuple, acc: Partial):
-    """Gate stage inputs on the running accumulator: stage k's attention
+    """Fence stage inputs on the running accumulator: stage k's attention
     cannot start before stage k-1 merged, so only O(1) score matrices are
-    ever live (the ppermutes themselves don't consume acc and still get
+    ever live (the channel puts don't pass through the fence and still get
     hoisted/overlapped by the scheduler)."""
-    out = optimization_barrier(tuple(tensors) + tuple(acc))
-    n = len(tensors)
-    return out[:n], Partial(*out[n:])
+    vals, accs = fence(tensors, tuple(acc))
+    return vals, Partial(*accs)
 from .ulysses import group_positions, scatter_o
 
 HEAD_AXIS = 2
@@ -130,11 +128,14 @@ def torus_attention(
         )
         acc = _merge_slice(acc, part, u * ls, ls)
 
+    stream = Stream("torus")
+
     # ---- Pull-Q stages: Q chunks arrive one hop-distance k at a time
     q_recv = [None] * p_u  # q_recv[j] = Q chunk from ulysses peer j
     for kstage in range(1, p_u):
         send = jnp.take(qc, (u + kstage) % p_u, axis=0)
-        recv = ppermute(send, layout.axes, layout.ulysses_stage_perm(kstage))
+        recv = torus_hop(layout, kstage, send, stream=stream,
+                         overlaps="diag-KV attend").wait()
         src = (u - kstage) % p_u
         if not fused_pull_q:
             part = ring_attention(
@@ -169,9 +170,11 @@ def torus_attention(
     # ---- Pull-KV stages: KV chunks arrive; all Q attends each new chunk
     for kstage in range(1, p_u):
         src = (u - kstage) % p_u
-        perm = layout.ulysses_stage_perm(kstage)
-        k_recv = ppermute(jnp.take(kc, (u + kstage) % p_u, axis=0), layout.axes, perm)
-        v_recv = ppermute(jnp.take(vc, (u + kstage) % p_u, axis=0), layout.axes, perm)
+        k_recv, v_recv = torus_hop(
+            layout, kstage,
+            jnp.take(kc, (u + kstage) % p_u, axis=0),
+            jnp.take(vc, (u + kstage) % p_u, axis=0),
+            stream=stream, overlaps="gathered-Q attend").payload
         (k_recv, v_recv), acc = _gate((k_recv, v_recv), acc)
         kpos_fn = lambda owner_r, s=src: _rank_of(layout, s, owner_r) * ls + jnp.arange(ls)
         part = ring_attention(

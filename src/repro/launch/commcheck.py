@@ -1,0 +1,108 @@
+"""HLO overlap validation gate (CI step; DESIGN.md §8).
+
+Traces the two comm-heaviest programs — swift_torus attention and the
+displaced patch pipeline — on an 8-fake-device CPU mesh, records their
+intended one-sided schedules (repro.comm.trace), compiles, and validates:
+
+  * every channel put appears as a collective-permute with the intended
+    route (device pairs), and
+  * every declared overlap (torus hops vs attend compute, ring rotation
+    vs attend, pipe hand-off vs stage compute) is admissible in the
+    compiled program.
+
+Exit code 1 on any failure, so schedule regressions (a barrier that
+serialises a put, a refactor that silently drops a transfer) fail fast.
+
+    python -m repro.launch.commcheck
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> int:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from .. import comm
+    from ..configs import get_reduced
+    from ..core import SPConfig, sp_attention
+    from ..core.pipefusion import KVState, PipelineConfig
+    from ..models import ParallelContext, get_model
+    from ..models.dit import COND_TOKENS, dit_forward_displaced
+    from ..serving import SamplerConfig
+    from ..serving.sampler import hybrid_state_shape
+    from .mesh import make_hybrid_mesh
+
+    assert len(jax.devices()) == 8, "commcheck needs 8 (fake) devices"
+    reports = []
+
+    # --- 1. swift_torus attention: torus hops + ring rotations ----------
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    sp = SPConfig(strategy="swift_torus", sp_axes=("pod", "model"),
+                  batch_axes=("data",))
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (2, 32, 2, 16))  # 2 heads => P_u = P_r = 2
+    k = jax.random.normal(kk, (2, 32, 2, 16))
+    v = jax.random.normal(kv, (2, 32, 2, 16))
+    with comm.record("swift_torus") as tr:
+        lowered = jax.jit(
+            lambda q, k, v: sp_attention(q, k, v, mesh=mesh, cfg=sp)
+        ).lower(q, k, v)
+    # an empty trace must never pass the gate: both the torus hops and the
+    # intra-ring rotations are expected on this (P_u=2, P_r=2) plan
+    for want in ("torus", "ring"):
+        if not any(e.stream == want for e in tr.events):
+            print(f"commcheck FAIL: no '{want}' channel puts recorded in the "
+                  "swift_torus trace")
+            return 1
+    reports.append(comm.validate(tr, lowered.compile().as_text(), mesh))
+
+    # --- 2. displaced patch pipeline: pipe-axis stage hand-off ----------
+    hmesh = make_hybrid_mesh(cfg=1, pipe=2, data=1, model=4)
+    cfg = dataclasses.replace(get_reduced("flux-12b"), dtype="float32",
+                              n_heads=4, n_kv_heads=4)
+    params, _ = get_model(cfg).init(cfg, jax.random.PRNGKey(1), 1)
+    psp = SPConfig(strategy="swift_torus", sp_axes=("model",),
+                   batch_axes=("data",), pp_axis="pipe")
+    ctx = ParallelContext(hmesh, psp, "prefill")
+    sc = SamplerConfig(num_steps=2,
+                       pipeline=PipelineConfig(pp=2, warmup_steps=1))
+    seq = 32
+    lat = jax.random.normal(jax.random.PRNGKey(2), (1, seq, 64), jnp.float32)
+    cond = jax.random.normal(jax.random.PRNGKey(3),
+                             (1, COND_TOKENS, cfg.d_model), jnp.float32)
+    state = hybrid_state_shape(cfg, 1, seq, sc)
+    tt = jnp.full((1,), 0.5, jnp.float32)
+
+    def step(lat, cond, sk, sv):
+        return dit_forward_displaced(params, cfg, ctx, latents=lat, cond=cond,
+                                     timesteps=tt, kv_state=KVState(sk, sv),
+                                     num_patches=2, pp=2)
+
+    with comm.record("displaced_pipe") as tr:
+        lowered = jax.jit(step).lower(lat, cond, state.k, state.v)
+    if not any(e.stream == "pipe" for e in tr.events):
+        print("commcheck FAIL: no pipe hand-off recorded in the displaced "
+              "pipeline trace")
+        return 1
+    reports.append(comm.validate(tr, lowered.compile().as_text(), hmesh))
+
+    ok = True
+    for rep in reports:
+        print(rep.summary())
+        ok &= rep.ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

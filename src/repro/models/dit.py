@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..comm import Stream, pipe_handoff
 from ..configs.base import ModelConfig
 from ..core.pipefusion import (
     KVState,
@@ -169,13 +170,26 @@ def dit_forward_displaced(
 
     The python patch loop realises the same dataflow the pp-stage pipeline
     executes across devices: stage s = layers ``stage_layers(L, pp)[s]``,
-    micro-step (p, s) runs patch p's slice of the scan below.  ``pp`` only
-    validates the stage split here — the weights' layer dim is what the
-    engine shards over the pipe axis.
+    micro-step (p, s) runs patch p's stage-s scan segment.  When the mesh
+    carries a ``pp``-sized ``ctx.sp.pp_axis``, every stage boundary is an
+    explicit one-sided hand-off over the pipe axis (``comm.pipe_handoff``,
+    DESIGN.md §8) instead of a GSPMD-implicit transfer: the HLO then names
+    one collective-permute per (patch, boundary) carrying the activation,
+    independent of the neighbouring patches' compute — which is what lets
+    stage s's compute on patch p overlap patch (p+1)'s transfer, and what
+    ``comm.trace`` validates against ``comm_model.hybrid_step_latency``'s
+    bubble/overlap assumptions.  Without the axis (single-device tests)
+    the hand-off is skipped and the maths is unchanged.
     """
     b_, t_, _ = latents.shape
-    stage_layers(cfg.n_layers, pp)  # validate the stage partition
+    stages = stage_layers(cfg.n_layers, pp)
     slices = patch_slices(COND_TOKENS, t_, num_patches)
+    pp_axis = ctx.sp.pp_axis
+    explicit_handoff = (pp > 1 and pp_axis is not None
+                        and pp_axis in ctx.mesh.axis_names
+                        and ctx.mesh.shape[pp_axis] == pp)
+    stream = Stream("pipe")
+    batch_axes = ctx.sp.effective_batch_axes(ctx.mesh)
 
     x_lat = linear(latents, params["proj_in"])
     x_cond = linear(cond, params["cond_proj"])
@@ -205,8 +219,21 @@ def dit_forward_displaced(
             x = x + g2[:, None] * mlp(h, lp["mlp"], cfg)
             return x, kv
 
-        xp, (kp, vp) = lax.scan(body, xp, (params["layers"], ek, ev),
-                                unroll=cfg.n_layers <= 2)
+        # stage-segmented scan: stage s runs its n_layers/pp blocks, then
+        # hands the activation to stage s+1 over the pipe axis
+        kp_segs, vp_segs = [], []
+        for s, (l0, cnt) in enumerate(stages):
+            seg = jax.tree.map(lambda a: a[l0:l0 + cnt], params["layers"])
+            xp, (kp_s, vp_s) = lax.scan(body, xp,
+                                        (seg, ek[l0:l0 + cnt], ev[l0:l0 + cnt]),
+                                        unroll=cnt <= 2)
+            kp_segs.append(kp_s)
+            vp_segs.append(vp_s)
+            if explicit_handoff and s < pp - 1:
+                xp = pipe_handoff(xp, ctx.mesh, pp_axis,
+                                  batch_axes=batch_axes, stream=stream)
+        kp = jnp.concatenate(kp_segs, axis=0)
+        vp = jnp.concatenate(vp_segs, axis=0)
         new_state = update_state_rows(new_state, kp, vp, start)
         vp_out = _final_projection(params, cfg, xp, t_emb)
         if start == 0:  # patch 0 carries the conditioning tokens

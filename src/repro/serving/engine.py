@@ -50,6 +50,9 @@ class DiTResult:
     latents: jax.Array
     latency: float
     sampling_steps: int
+    # per-step KV staleness trajectory of the displaced pipeline (empty for
+    # non-pipelined sampling); see core/pipefusion.kv_drift
+    kv_drift: list[float] = dataclasses.field(default_factory=list)
 
 
 class DiTServer:
@@ -108,7 +111,12 @@ class DiTServer:
                                               cond, t, dt, self.sampler,
                                               state, warm=False)
 
-                self._step_cache[key] = (jax.jit(warm), jax.jit(displaced))
+                # donate the threaded KV state (arg 4): the caller discards
+                # the old state each step, so XLA may update it in place
+                # instead of allocating a second full-size KV buffer
+                self._step_cache[key] = (jax.jit(warm, donate_argnums=(4,)),
+                                         jax.jit(displaced,
+                                                 donate_argnums=(4,)))
             else:
                 def f(params, x, cond, t):
                     return sample_step(params, self.cfg, self.ctx, x, cond, t,
@@ -155,21 +163,28 @@ class DiTServer:
         x = jax.random.normal(sub, (b, t, 64), self.cfg.dtype)
         fn = self._step_fn(b, t)
         dt = 1.0 / self.sampler.num_steps
+        drift_vals = []
         if self.sampler.pipelined:
             warm_fn, displaced_fn = fn
             state = hybrid_state_shape(self.cfg, b, t, self.sampler)
             for i in range(self.sampler.num_steps):
-                f = (warm_fn if i < self.sampler.pipeline.warmup_steps
+                f = (warm_fn if self.sampler.pipeline.warm_step(i)
                      else displaced_fn)
-                x, state = f(self.params, x, cond, jnp.float32(1.0 - i * dt),
-                             state)
+                x, state, m = f(self.params, x, cond,
+                                jnp.float32(1.0 - i * dt), state)
+                # device [B] vector: no host sync inside the timed loop
+                drift_vals.append(m["kv_drift_per_request"])
         else:
             for i in range(self.sampler.num_steps):
                 x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
         x.block_until_ready()
         now = time.time()
+        # materialise after the timed region; row i is request i's own
+        # trajectory (padded rows are never handed to a request)
+        drifts = [[float(v[i]) for v in drift_vals] for i in range(n_real)]
         return [
-            DiTResult(r.rid, x[i], now - r.submitted, self.sampler.num_steps)
+            DiTResult(r.rid, x[i], now - r.submitted, self.sampler.num_steps,
+                      kv_drift=drifts[i] if drift_vals else [])
             for i, r in enumerate(batch)
         ]
 

@@ -10,12 +10,15 @@ Beyond the paper, the sampler composes two extra parallel axes with SP
 (DESIGN.md §7):
 
   * **CFG parallelism** (``SamplerConfig.cfg_parallel``): with guidance
-    enabled, the conditional and unconditional branches are stacked on the
-    batch dim and — when the mesh carries ``SPConfig.cfg_axis`` — sharded
-    across a 2-way mesh axis, so each half of the mesh runs one branch.
-    The branches recombine with a single psum-style weighted sum of the
-    velocities (``v = g·v_cond + (1-g)·v_uncond``), the only cross-branch
-    communication of the whole step.
+    enabled, the k guidance branches are stacked on the batch dim and —
+    when the mesh carries ``SPConfig.cfg_axis`` — sharded across a k-way
+    mesh axis, so each mesh slice runs one branch.  The branches recombine
+    with a single psum-style weighted sum of the velocities
+    (``v = Σ_i w_i·v_i``), the only cross-branch communication of the
+    whole step.  The classic pair is k = 2 with weights ``(g, 1-g)``;
+    ``cfg_weights`` generalises to negative prompts and multi-conditioning
+    stacks (k > 2), with per-branch conditioning passed as a stacked
+    ``[k, B, COND_TOKENS, d]`` tensor.
   * **Displaced patch pipelining** (``SamplerConfig.pipeline``): after
     ``warmup_steps`` synchronous steps, each step runs the PipeFusion
     forward (models/dit.py: ``dit_forward_displaced``) reusing
@@ -30,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..core.pipefusion import KVState, PipelineConfig, init_kv_state
+from ..core.pipefusion import KVState, PipelineConfig, init_kv_state, kv_drift
 from ..models import ParallelContext
 from ..models.dit import (
     COND_TOKENS,
@@ -44,34 +47,67 @@ from ..models.dit import (
 class SamplerConfig:
     num_steps: int = 20
     guidance_scale: float = 1.0  # >1 enables classifier-free guidance
+    # Per-branch guidance weights for degree-k CFG (ROADMAP: k > 2 stacks).
+    # None = classic 2-way (guidance_scale, 1 - guidance_scale).  With k > 2
+    # (or a negative prompt at k = 2) every branch's conditioning must be
+    # supplied explicitly as a stacked [k, B, COND_TOKENS, d] ``cond``
+    # (zeros rows = unconditional branches).
+    cfg_weights: tuple[float, ...] | None = None
     # hybrid parallelism (DESIGN.md §7); both compose with any SP strategy
-    cfg_parallel: bool = False  # evaluate the CFG pair on the cfg mesh axis
+    cfg_parallel: bool = False  # evaluate the CFG branches on the cfg axis
     pipeline: PipelineConfig | None = None  # patch-level pipelining
 
     @property
     def guided(self) -> bool:
-        return self.guidance_scale != 1.0
+        return self.guidance_scale != 1.0 or self.cfg_weights is not None
+
+    @property
+    def branch_weights(self) -> tuple[float, ...]:
+        if self.cfg_weights is not None:
+            return tuple(self.cfg_weights)
+        return (self.guidance_scale, 1.0 - self.guidance_scale)
+
+    @property
+    def cfg_degree(self) -> int:
+        return len(self.branch_weights)
 
     @property
     def pipelined(self) -> bool:
         return self.pipeline is not None and self.pipeline.enabled
 
 
-def _cfg_recombine(v_pair: jax.Array, batch: int, g: float) -> jax.Array:
-    """The single cross-branch exchange: v = g·v_cond + (1-g)·v_uncond.
+def _cfg_recombine(v_all: jax.Array, batch: int,
+                   weights: tuple[float, ...]) -> jax.Array:
+    """The single cross-branch exchange: v = Σ_i w_i·v_i.
 
-    Written as a weighted sum (not ``v_u + g (v_c - v_u)``) so with the
-    pair sharded over the cfg axis it lowers to exactly one psum-sized
-    collective of the velocity tensor.
+    Written as one weighted sum over the stacked branch dim (not the
+    ``v_u + g (v_c - v_u)`` algebra) so with the branches sharded over the
+    cfg axis it lowers to exactly one psum-sized collective of the
+    velocity tensor, for any guidance degree k.
     """
-    v_c, v_u = v_pair[:batch], v_pair[batch:]
-    return g * v_c + (1.0 - g) * v_u
+    k = len(weights)
+    v_br = v_all.reshape(k, batch, *v_all.shape[1:])
+    w = jnp.asarray(weights, v_all.dtype).reshape(k, *([1] * (v_all.ndim)))
+    return jnp.sum(w * v_br, axis=0)
 
 
-def _stack_cfg_pair(x_t, cond):
-    """[B,...] -> [2B,...]: conditional branch first, unconditional second."""
-    return (jnp.concatenate([x_t, x_t], axis=0),
-            jnp.concatenate([cond, jnp.zeros_like(cond)], axis=0))
+def _branch_conds(cond: jax.Array, k: int) -> jax.Array:
+    """Per-branch conditioning [k, B, C, d] from the user-facing ``cond``:
+    stacked explicit branches, or the classic (cond, zeros) pair."""
+    if cond.ndim == 4:
+        assert cond.shape[0] == k, (
+            f"stacked cond has {cond.shape[0]} branches, guidance degree {k}")
+        return cond
+    assert k == 2, (
+        f"guidance degree {k} needs explicit stacked [k, B, C, d] cond")
+    return jnp.stack([cond, jnp.zeros_like(cond)], axis=0)
+
+
+def _stack_cfg_branches(x_t, cond, k: int):
+    """[B,...] -> [kB,...]: branch i occupies rows [i·B, (i+1)·B)."""
+    conds = _branch_conds(cond, k)
+    return (jnp.concatenate([x_t] * k, axis=0),
+            jnp.concatenate(list(conds), axis=0))
 
 
 def _ctx_for(ctx: ParallelContext, sc: SamplerConfig) -> ParallelContext:
@@ -92,10 +128,21 @@ def sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
     b = x_t.shape[0]
     tt = jnp.full((b,), t, jnp.float32)
     if sc.guided and sc.cfg_parallel:
-        lat2, cond2 = _stack_cfg_pair(x_t, cond)
-        v2 = dit_forward(params, cfg, ctx, latents=lat2, cond=cond2,
-                         timesteps=jnp.concatenate([tt, tt]))
-        v = _cfg_recombine(v2, b, sc.guidance_scale)
+        k = sc.cfg_degree
+        lat_k, cond_k = _stack_cfg_branches(x_t, cond, k)
+        v_all = dit_forward(params, cfg, ctx, latents=lat_k, cond=cond_k,
+                            timesteps=jnp.concatenate([tt] * k))
+        v = _cfg_recombine(v_all, b, sc.branch_weights)
+        return x_t - dt * v.astype(x_t.dtype)
+    if sc.guided and sc.cfg_weights is not None:
+        # sequential general-degree guidance: one forward per branch,
+        # recombined with the same weighted sum as the parallel path
+        conds = _branch_conds(cond, sc.cfg_degree)
+        v = None
+        for w, c in zip(sc.branch_weights, conds):
+            vb = dit_forward(params, cfg, ctx, latents=x_t, cond=c,
+                             timesteps=tt)
+            v = w * vb if v is None else v + w * vb
         return x_t - dt * v.astype(x_t.dtype)
     v = dit_forward(params, cfg, ctx, latents=x_t, cond=cond, timesteps=tt)
     if sc.guided:
@@ -111,8 +158,9 @@ def sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
 
 def hybrid_state_shape(cfg: ModelConfig, batch: int, seq_len: int,
                        sc: SamplerConfig) -> KVState:
-    """Zero KVState matching what the hybrid steps thread (cfg pair incl.)."""
-    b = 2 * batch if (sc.guided and sc.cfg_parallel) else batch
+    """Zero KVState matching what the hybrid steps thread (all k guidance
+    branches included when cfg-parallel)."""
+    b = sc.cfg_degree * batch if (sc.guided and sc.cfg_parallel) else batch
     return init_kv_state(cfg.n_layers, b, COND_TOKENS + seq_len,
                          cfg.n_kv_heads, cfg.resolved_head_dim,
                          jnp.dtype(cfg.dtype))
@@ -121,12 +169,19 @@ def hybrid_state_shape(cfg: ModelConfig, batch: int, seq_len: int,
 def hybrid_sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
                        x_t: jax.Array, cond: jax.Array, t: jax.Array,
                        dt: jax.Array, sc: SamplerConfig, state: KVState,
-                       *, warm: bool) -> tuple[jax.Array, KVState]:
+                       *, warm: bool
+                       ) -> tuple[jax.Array, KVState, dict[str, jax.Array]]:
     """One Euler step that also threads the displaced-pipeline KV state.
 
     ``warm`` (static): True runs the fully-synchronous forward — identical
     computation to ``sample_step``'s x-path — while capturing per-layer KV;
     False runs the PipeFusion displaced forward against ``state``.
+
+    The third return is the per-step metrics dict: ``kv_drift`` is the
+    batch-mean staleness measure ``PipelineConfig.resync_every`` bounds
+    (core/pipefusion.kv_drift) and ``kv_drift_per_request`` its [B]
+    per-request breakdown (guidance branches of one request folded
+    together); both are 0 for warm steps.
     """
     assert sc.pipelined
     ctx = _ctx_for(ctx, sc)
@@ -134,12 +189,13 @@ def hybrid_sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
     b = x_t.shape[0]
     tt = jnp.full((b,), t, jnp.float32)
     if sc.guided and sc.cfg_parallel:
-        lat_in, cond_in = _stack_cfg_pair(x_t, cond)
-        tt_in = jnp.concatenate([tt, tt])
+        lat_in, cond_in = _stack_cfg_branches(x_t, cond, sc.cfg_degree)
+        tt_in = jnp.concatenate([tt] * sc.cfg_degree)
     elif sc.guided:
         raise NotImplementedError(
-            "pipelined sampling with sequential CFG would need two KV "
-            "states; enable cfg_parallel (works on any mesh) instead")
+            "pipelined sampling with sequential CFG would need one KV "
+            "state per branch; enable cfg_parallel (works on any mesh) "
+            "instead")
     else:
         lat_in, cond_in, tt_in = x_t, cond, tt
 
@@ -147,26 +203,36 @@ def hybrid_sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
         v_out, state = dit_forward(params, cfg, ctx, latents=lat_in,
                                    cond=cond_in, timesteps=tt_in,
                                    return_layer_kv=True)
+        per_req = jnp.zeros((b,), jnp.float32)
     else:
+        prev = state
         v_out, state = dit_forward_displaced(
             params, cfg, ctx, latents=lat_in, cond=cond_in, timesteps=tt_in,
             kv_state=state, num_patches=pipe.patches, pp=pipe.pp)
+        per_req = kv_drift(prev, state, per_item=True).astype(jnp.float32)
+        if sc.guided and sc.cfg_parallel:
+            # branch rows of one request fold into that request's drift
+            per_req = per_req.reshape(sc.cfg_degree, b).mean(axis=0)
     if sc.guided and sc.cfg_parallel:
-        v = _cfg_recombine(v_out, b, sc.guidance_scale)
+        v = _cfg_recombine(v_out, b, sc.branch_weights)
     else:
         v = v_out
-    return x_t - dt * v.astype(x_t.dtype), state
+    metrics = {"kv_drift": per_req.mean(), "kv_drift_per_request": per_req}
+    return x_t - dt * v.astype(x_t.dtype), state, metrics
 
 
 def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
            key: jax.Array, batch: int, seq_len: int, cond: jax.Array,
            sc: SamplerConfig = SamplerConfig(),
-           step_fn=None) -> jax.Array:
+           step_fn=None, metrics: list[dict] | None = None) -> jax.Array:
     """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS].
 
     With ``sc.pipeline`` set, the loop threads the displaced-pipeline KV
-    state: the first ``warmup_steps`` steps run synchronously, the rest
-    displaced (PipeFusion).  A custom ``step_fn`` bypasses all of that.
+    state: the first ``warmup_steps`` steps run synchronously, then
+    displaced (PipeFusion) with a periodic synchronous re-sync every
+    ``resync_every`` steps.  Passing a ``metrics`` list collects one
+    per-step dict (``step``, ``warm``, ``kv_drift``) — the surfaced
+    staleness trajectory.  A custom ``step_fn`` bypasses all of that.
     """
     x = jax.random.normal(key, (batch, seq_len, LATENT_CHANNELS), cfg.dtype)
     dt = 1.0 / sc.num_steps
@@ -180,9 +246,17 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
         return x
     state = hybrid_state_shape(cfg, batch, seq_len, sc)
     for i in range(sc.num_steps):
-        warm = i < sc.pipeline.warmup_steps
-        x, state = hybrid_sample_step(params, cfg, ctx, x, cond,
-                                      1.0 - i * dt, dt, sc, state, warm=warm)
+        warm = sc.pipeline.warm_step(i)
+        x, state, m = hybrid_sample_step(params, cfg, ctx, x, cond,
+                                         1.0 - i * dt, dt, sc, state,
+                                         warm=warm)
+        if metrics is not None:
+            metrics.append({
+                "step": i, "warm": warm,
+                "kv_drift": float(m["kv_drift"]),
+                "kv_drift_per_request": [
+                    float(d) for d in m["kv_drift_per_request"]],
+            })
     return x
 
 

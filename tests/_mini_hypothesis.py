@@ -17,7 +17,6 @@ traceback.  See tests/README.md.
 """
 from __future__ import annotations
 
-import functools
 import random
 
 

@@ -1,0 +1,183 @@
+"""repro.comm channels/streams on the 8-fake-device mesh: equivalence of
+the Stream-based transfer programs against the raw lax collectives they
+replaced, and trace-vs-compiled-HLO overlap validation (the ROADMAP
+bubble-term check for the displaced pipeline)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.compat import shard_map
+from repro.configs import get_reduced
+from repro.core import SPConfig, sp_attention
+from repro.core.collectives import (
+    GroupLayout,
+    grouped_all_to_all,
+    monolithic_all_to_all,
+    ungroup_all_to_all,
+)
+from repro.core.pipefusion import PipelineConfig
+from repro.launch.mesh import make_hybrid_mesh
+from repro.models import ParallelContext, get_model
+from repro.models.dit import COND_TOKENS, dit_forward_displaced
+from repro.serving import SamplerConfig
+from repro.serving.sampler import hybrid_state_shape
+
+SP_AXES = ("pod", "model")
+
+
+def _layout(p_u, p_r):
+    return GroupLayout(SP_AXES, p_u, p_r, ulysses_outer=True)
+
+
+def _smap(fn, mesh, spec):
+    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                     check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# equivalence vs raw lax collectives
+# ---------------------------------------------------------------------------
+
+def test_stream_ring_shift_matches_lax_ppermute(mesh8, rng):
+    layout = _layout(2, 2)
+    x = jax.random.normal(rng, (8, 16))
+    spec = P(SP_AXES)
+    via_comm = _smap(lambda xs: comm.ring_shift(layout, xs).wait(),
+                     mesh8, spec)
+    via_lax = _smap(
+        lambda xs: lax.ppermute(xs, SP_AXES, perm=layout.ring_perm(1)),
+        mesh8, spec)
+    np.testing.assert_array_equal(np.asarray(via_comm(x)),
+                                  np.asarray(via_lax(x)))
+
+
+def test_staged_all_to_all_matches_monolithic(mesh8, rng):
+    """Full-axis Ulysses group: the staged channel program must deliver
+    exactly what the atomic lax.all_to_all delivers."""
+    layout = _layout(4, 1)
+    x = jax.random.normal(rng, (2, 32, 8, 4))
+    spec = P(None, SP_AXES, None, None)
+
+    def staged(xs):
+        return comm.staged_all_to_all(xs, layout, split_axis=2)
+
+    def monolithic(xs):
+        return monolithic_all_to_all(xs, layout, split_axis=2)
+
+    out_spec = P(None, None, SP_AXES, None, None)
+    f1 = shard_map(staged, mesh=mesh8, in_specs=(spec,), out_specs=out_spec,
+                   check_vma=False)
+    f2 = shard_map(monolithic, mesh=mesh8, in_specs=(spec,),
+                   out_specs=out_spec, check_vma=False)
+    np.testing.assert_array_equal(np.asarray(f1(x)), np.asarray(f2(x)))
+
+
+@pytest.mark.parametrize("p_u,p_r", [(2, 2), (4, 1)])
+def test_grouped_ungroup_roundtrip(p_u, p_r, mesh8, rng):
+    layout = _layout(p_u, p_r)
+    x = jax.random.normal(rng, (2, 32, 8, 4))
+    spec = P(None, SP_AXES, None, None)
+
+    def roundtrip(xs):
+        stacked = grouped_all_to_all(xs, layout, split_axis=2)
+        return ungroup_all_to_all(stacked, layout, concat_axis=2)
+
+    f = _smap(roundtrip, mesh8, spec)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x), rtol=0, atol=0)
+
+
+def test_pipe_handoff_value_preserving_and_traced(rng):
+    mesh = make_hybrid_mesh(cfg=1, pipe=2, data=2, model=2)
+    x = jax.random.normal(rng, (4, 8, 16))
+
+    def f(xs):
+        return comm.pipe_handoff(xs, mesh, "pipe", batch_axes=("data",))
+
+    with comm.record("pipe") as tr:
+        lowered = jax.jit(f).lower(x)
+    assert len(tr.events) == 1
+    (e,) = tr.events
+    assert e.axes == ("pipe",) and e.overlaps == "stage compute"
+    # replicated over the pipe axis, the rotation is value-preserving
+    np.testing.assert_array_equal(np.asarray(jax.jit(f)(x)), np.asarray(x))
+    # ... but it is a *real* wire transfer in the compiled program
+    report = comm.validate(tr, lowered.compile().as_text(), mesh,
+                           require_overlap=False)
+    assert report.hlo_permutes >= 1
+    assert not any("no collective-permute" in f_ for f_ in report.failures)
+
+
+# ---------------------------------------------------------------------------
+# trace-vs-HLO overlap validation
+# ---------------------------------------------------------------------------
+
+def test_torus_schedule_validates_against_hlo(mesh8, rng):
+    """Every put of the Torus schedule must appear as a collective-permute
+    with the intended route, and each overlap intent must be admissible in
+    the compiled program."""
+    kq, kk, kv = jax.random.split(rng, 3)
+    # 2 heads on the 4-way SP group => P_u = gcd(4, 2) = 2, P_r = 2: both
+    # the torus hops AND the intra-ring rotations appear in the schedule
+    q = jax.random.normal(kq, (2, 32, 2, 16))
+    k = jax.random.normal(kk, (2, 32, 2, 16))
+    v = jax.random.normal(kv, (2, 32, 2, 16))
+    cfg = SPConfig(strategy="swift_torus", sp_axes=SP_AXES,
+                   batch_axes=("data",))
+
+    def fn(q, k, v):
+        return sp_attention(q, k, v, mesh=mesh8, cfg=cfg)
+
+    with comm.record("torus") as tr:
+        lowered = jax.jit(fn).lower(q, k, v)
+    assert tr.events, "no channel puts recorded for the torus schedule"
+    assert any(e.stream == "torus" for e in tr.events)
+    assert any(e.stream == "ring" for e in tr.events)
+    report = comm.validate(tr, lowered.compile().as_text(), mesh8)
+    assert report.ok, report.summary()
+    assert report.overlapped, "no overlap intent validated"
+
+
+def test_displaced_pipe_handoff_overlaps_stage_compute(rng):
+    """The ROADMAP bubble-term validation: the displaced pipeline's stage
+    hand-off must be an explicit collective-permute over the pipe axis
+    that the compiled HLO can overlap with stage compute (patch p+1's
+    transfer vs patch p's compute)."""
+    mesh = make_hybrid_mesh(cfg=1, pipe=2, data=1, model=4)
+    cfg = dataclasses.replace(get_reduced("flux-12b"), dtype="float32",
+                              n_heads=4, n_kv_heads=4)
+    bundle = get_model(cfg)
+    params, _ = bundle.init(cfg, jax.random.PRNGKey(0), 1)
+    sp = SPConfig(strategy="swift_torus", sp_axes=("model",),
+                  batch_axes=("data",), pp_axis="pipe")
+    ctx = ParallelContext(mesh, sp, "prefill")
+    sc = SamplerConfig(num_steps=2,
+                       pipeline=PipelineConfig(pp=2, warmup_steps=1))
+    seq = 32
+    lat = jax.random.normal(rng, (1, seq, 64), jnp.float32)
+    cond = jax.random.normal(jax.random.PRNGKey(1),
+                             (1, COND_TOKENS, cfg.d_model), jnp.float32)
+    state = hybrid_state_shape(cfg, 1, seq, sc)
+    tt = jnp.full((1,), 0.5, jnp.float32)
+
+    def step(lat, cond, k, v):
+        from repro.core.pipefusion import KVState
+        return dit_forward_displaced(params, cfg, ctx, latents=lat,
+                                     cond=cond, timesteps=tt,
+                                     kv_state=KVState(k, v),
+                                     num_patches=2, pp=2)
+
+    with comm.record("displaced") as tr:
+        lowered = jax.jit(step).lower(lat, cond, state.k, state.v)
+    pipe_events = [e for e in tr.events if e.stream == "pipe"]
+    # one hand-off per (patch, stage boundary): 2 patches x 1 boundary
+    assert len(pipe_events) == 2, tr.events
+    assert all(e.overlaps == "stage compute" for e in pipe_events)
+    report = comm.validate(tr, lowered.compile().as_text(), mesh)
+    assert report.ok, report.summary()
+    assert any(ch.startswith("pipe.") for ch in report.overlapped), report

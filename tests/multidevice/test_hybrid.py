@@ -94,6 +94,30 @@ def test_unguided_sampling_on_hybrid_mesh(setup):
                                atol=2e-4, rtol=2e-4)
 
 
+def test_cfg_degree_4_on_4way_cfg_axis(setup):
+    """ROADMAP k>2 guidance: 4 branches (3 conditionings + uncond) sharded
+    over a 4-way cfg axis == the same weighted sum computed sequentially
+    on one device."""
+    cfg, params, _, cond = setup
+    weights = (2.0, 1.0, 0.5, -2.5)
+    conds = jnp.concatenate(
+        [cond, 2.0 * cond, -1.0 * cond, jnp.zeros_like(cond)], axis=0)
+    conds = conds.reshape(4, 1, COND_TOKENS, cfg.d_model)
+    ref = _sample(cfg, params, conds,
+                  jax.make_mesh((1, 1), ("data", "model")),
+                  SPConfig(strategy="full", sp_axes=("model",),
+                           batch_axes=("data",)),
+                  SamplerConfig(num_steps=2, cfg_weights=weights))
+    mesh = make_hybrid_mesh(cfg=4, pipe=1, data=1, model=2)
+    sp = SPConfig(strategy="swift_torus", sp_axes=("model",),
+                  batch_axes=("data",), cfg_axis="cfg", pp_axis="pipe")
+    par = _sample(cfg, params, conds, mesh, sp,
+                  SamplerConfig(num_steps=2, cfg_weights=weights,
+                                cfg_parallel=True))
+    np.testing.assert_allclose(np.asarray(par), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
 def test_dit_server_hybrid_end_to_end(setup):
     """DiTServer drives the full composition, with the block weights
     sharded over the pipe axis."""
@@ -117,3 +141,8 @@ def test_dit_server_hybrid_end_to_end(setup):
     assert sorted(r.rid for r in results) == [0, 1]
     for r in results:
         assert bool(jnp.all(jnp.isfinite(r.latents)))
+        # the per-step staleness trajectory is surfaced: warm step 0 has
+        # zero drift, the displaced steps a positive, finite drift
+        assert len(r.kv_drift) == 3
+        assert r.kv_drift[0] == 0.0
+        assert all(d > 0.0 and jnp.isfinite(d) for d in r.kv_drift[1:])

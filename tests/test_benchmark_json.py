@@ -1,0 +1,45 @@
+"""BENCH_*.json trajectory records (ROADMAP comm-model calibration data):
+the run.py writer round-trips, and hybrid_sweep's structured records pair
+every swept config with its comm-model prediction breakdown."""
+import json
+
+from benchmarks import hybrid_sweep
+from benchmarks.run import parse_row, write_bench_json
+
+
+def test_parse_row_keeps_commas_in_derived():
+    r = parse_row("hybrid_sweep/x/N2/cfg_pp2,123.45,cfg=2,pp=2,speedup=3.9x")
+    assert r == {"name": "hybrid_sweep/x/N2/cfg_pp2", "us": 123.45,
+                 "derived": "cfg=2,pp=2,speedup=3.9x"}
+    assert parse_row("broken,NaN,ERROR:x")["us"] is None
+
+
+def test_hybrid_sweep_records_structure():
+    recs = hybrid_sweep.records()
+    rows = hybrid_sweep.run()
+    assert len(recs) == len(rows)
+    names = {r["name"] for r in recs}
+    assert len(names) == len(recs)  # per-config, no duplicates
+    for r in recs:
+        assert r["predicted_step_us"] > 0
+        assert set(r["workload"]) == {"batch", "seq", "heads", "head_dim",
+                                      "n_layers"}
+        assert set(r["plan"]) == {"cfg", "pp", "p_ulysses", "p_ring"}
+        assert r["measured_step_us"] is None  # CPU container: fit target only
+        assert "t_layer" in r["predicted_breakdown"] or (
+            "t_layers" in r["predicted_breakdown"])
+    # row <-> record latencies agree (the CSV is a projection of the JSON)
+    by_name = {parse_row(row)["name"]: parse_row(row)["us"] for row in rows}
+    for r in recs:
+        assert abs(by_name[r["name"]] - r["predicted_step_us"]) < 0.01
+
+
+def test_write_bench_json_roundtrip(tmp_path):
+    rows = hybrid_sweep.run()[:3]
+    path = write_bench_json(tmp_path, "hybrid_sweep", rows,
+                            hybrid_sweep.records()[:3])
+    data = json.loads(path.read_text())
+    assert path.name == "BENCH_hybrid_sweep.json"
+    assert data["schema"] == "bench.v1"
+    assert len(data["rows"]) == 3 and len(data["records"]) == 3
+    assert data["rows"][0]["name"].startswith("hybrid_sweep/")

@@ -1,0 +1,184 @@
+"""repro.comm.trace unit tests: HLO text parsing, device-pair expansion,
+and dependency-level overlap analysis on synthetic inputs (single device;
+the end-to-end trace-vs-compiled-HLO assertions live in
+tests/multidevice/test_comm_stream.py)."""
+import numpy as np
+import pytest
+
+from repro.comm import (
+    ScheduleTrace,
+    TransferEvent,
+    shift_perm,
+    validate,
+)
+from repro.comm.trace import (
+    collective_permutes,
+    expected_pairs,
+    independent_compute,
+    parse_computations,
+)
+
+SYNTH_OVERLAPPABLE = """
+HloModule m
+
+%fused_computation (p0: f32[4], p1: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0)
+  %p1 = f32[4]{0} parameter(1)
+  ROOT %add = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p1)
+}
+
+ENTRY %main (a: f32[4,4], b: f32[4,4]) -> f32[4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %b = f32[4,4]{1,0} parameter(1)
+  %collective-permute.1 = f32[4]{0} collective-permute(f32[4,4]{1,0} %a), channel_id=1, source_target_pairs={{0,1},{1,0},{2,3},{3,2},{4,5},{5,4},{6,7},{7,6}}
+  %dot.1 = f32[4]{0} dot(f32[4,4]{1,0} %b, f32[4,4]{1,0} %b), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  ROOT %fusion.1 = f32[4]{0} fusion(f32[4]{0} %collective-permute.1, f32[4]{0} %dot.1), kind=kLoop, calls=%fused_computation
+}
+"""
+
+SYNTH_SERIAL = """
+HloModule m
+
+%fused_computation (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0)
+  ROOT %add = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %collective-permute.1 = f32[4]{0} collective-permute(f32[4,4]{1,0} %a), channel_id=1, source_target_pairs={{0,1},{1,0},{2,3},{3,2},{4,5},{5,4},{6,7},{7,6}}
+  ROOT %fusion.1 = f32[4]{0} fusion(f32[4]{0} %collective-permute.1), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+SYNTH_WHILE_BODY = """
+HloModule m
+
+%body (arg_tuple.1: (f32[4,4], f32[4,4], s32[])) -> (f32[4,4], f32[4,4], s32[]) {
+  %arg_tuple.1 = (f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) parameter(0)
+  %get-tuple-element.1 = f32[4,4]{1,0} get-tuple-element((f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) %arg_tuple.1), index=0
+  %get-tuple-element.2 = f32[4,4]{1,0} get-tuple-element((f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) %arg_tuple.1), index=1
+  %get-tuple-element.3 = s32[] get-tuple-element((f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) %arg_tuple.1), index=2
+  %collective-permute.2 = f32[4,4]{1,0} collective-permute(f32[4,4]{1,0} %get-tuple-element.1), channel_id=2, source_target_pairs={{0,1},{1,0},{2,3},{3,2},{4,5},{5,4},{6,7},{7,6}}
+  %dot.2 = f32[4,4]{1,0} dot(f32[4,4]{1,0} %get-tuple-element.2, f32[4,4]{1,0} %get-tuple-element.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %tuple.1 = (f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) tuple(f32[4,4]{1,0} %collective-permute.2, f32[4,4]{1,0} %dot.2, s32[] %get-tuple-element.3)
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %tuple.0 = (f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) tuple(f32[4,4]{1,0} %a, f32[4,4]{1,0} %a)
+  %while.1 = (f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) while((f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) %tuple.0), body=%body
+  ROOT %gte = f32[4,4]{1,0} get-tuple-element((f32[4,4]{1,0}, f32[4,4]{1,0}, s32[]) %while.1), index=0
+}
+"""
+
+
+class _FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _FakeMesh:
+    """Duck-typed mesh: expected_pairs only touches devices/axis_names/shape."""
+
+    def __init__(self, **shape):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+        n = int(np.prod(list(shape.values())))
+        self.devices = np.array([_FakeDev(i) for i in range(n)]).reshape(
+            tuple(shape.values()))
+
+
+def test_parse_computations_splits_and_orders():
+    comps = parse_computations(SYNTH_OVERLAPPABLE)
+    assert set(comps) == {"%fused_computation", "ENTRY"} or len(comps) == 2
+    entry = [c for name, c in comps.items() if any(
+        i.op == "collective-permute" for i in c)][0]
+    ops = [i.op for i in entry]
+    assert "dot" in ops and "fusion" in ops and "parameter" in ops
+    fusion = [i for i in entry if i.op == "fusion"][0]
+    assert "%collective-permute.1" in fusion.operands
+    assert "%dot.1" in fusion.operands
+
+
+def test_collective_permutes_found():
+    (p,) = collective_permutes(SYNTH_OVERLAPPABLE)
+    assert p.op == "collective-permute"
+    assert "%a" in p.operands
+
+
+def test_independent_compute_detects_overlap_freedom():
+    comps = parse_computations(SYNTH_OVERLAPPABLE)
+    entry = [c for c in comps.values() if any(
+        i.op == "collective-permute" for i in c)][0]
+    perm = [i for i in entry if i.op == "collective-permute"][0]
+    free = independent_compute(entry, perm)
+    assert [i.name for i in free] == ["%dot.1"]  # fusion depends on permute
+
+    comps = parse_computations(SYNTH_SERIAL)
+    entry = [c for c in comps.values() if any(
+        i.op == "collective-permute" for i in c)][0]
+    perm = [i for i in entry if i.op == "collective-permute"][0]
+    assert independent_compute(entry, perm) == []
+
+
+def test_expected_pairs_matches_xla_expansion():
+    """Pinned against observed XLA source_target_pairs on the (2,2,2)
+    pod/data/model mesh."""
+    mesh = _FakeMesh(pod=2, data=2, model=2)
+    got = expected_pairs(mesh, ("model",), ((0, 1), (1, 0)))
+    assert got == frozenset(
+        [(0, 1), (1, 0), (2, 3), (3, 2), (4, 5), (5, 4), (6, 7), (7, 6)])
+    got2 = expected_pairs(mesh, ("pod", "model"), shift_perm(4, 1))
+    assert got2 == frozenset(
+        [(0, 1), (1, 4), (4, 5), (5, 0), (2, 3), (3, 6), (6, 7), (7, 2)])
+
+
+def _event(overlaps=""):
+    return TransferEvent(stream="s", channel="s.hop", stage=0,
+                         axes=("model",), perm=((0, 1), (1, 0)),
+                         shape=(4,), n_tensors=1, overlaps=overlaps)
+
+
+def test_validate_end_to_end_on_synthetic_hlo():
+    mesh = _FakeMesh(pod=2, data=2, model=2)
+    tr = ScheduleTrace("t", events=[_event(overlaps="attend")])
+    rep = validate(tr, SYNTH_OVERLAPPABLE, mesh)
+    assert rep.ok, rep.summary()
+    assert rep.hlo_permutes == 1 and rep.overlapped == ["s.hop"]
+
+    rep2 = validate(tr, SYNTH_SERIAL, mesh)
+    assert not rep2.ok
+    assert any("cannot overlap" in f for f in rep2.failures)
+
+    # a put whose route never made it into the HLO is a failure
+    tr3 = ScheduleTrace("t", events=[TransferEvent(
+        stream="s", channel="s.other", stage=0, axes=("pod",),
+        perm=((0, 1), (1, 0)), shape=(4,), n_tensors=1, overlaps="")])
+    rep3 = validate(tr3, SYNTH_OVERLAPPABLE, mesh)
+    assert not rep3.ok
+    assert any("no collective-permute" in f for f in rep3.failures)
+
+
+def test_tuple_param_computations_are_parsed():
+    """Regression: while/fori-loop body computations have tuple-typed
+    parameters (nested parens in the header); permutes inside them must be
+    visible to the validator or non-unrolled ring schedules falsely fail."""
+    comps = parse_computations(SYNTH_WHILE_BODY)
+    assert any("%body" in name for name in comps)
+    (p,) = collective_permutes(SYNTH_WHILE_BODY)
+    assert p.computation.startswith("%body")
+    body = [c for c in comps.values()
+            if any(i.op == "collective-permute" for i in c)][0]
+    assert [i.name for i in independent_compute(body, p)] == ["%dot.2"]
+    mesh = _FakeMesh(pod=2, data=2, model=2)
+    tr = ScheduleTrace("t", events=[_event(overlaps="attend")])
+    rep = validate(tr, SYNTH_WHILE_BODY, mesh)
+    assert rep.ok, rep.summary()
+
+
+def test_validate_without_overlap_intent_passes_serial_hlo():
+    mesh = _FakeMesh(pod=2, data=2, model=2)
+    tr = ScheduleTrace("t", events=[_event()])
+    assert validate(tr, SYNTH_SERIAL, mesh).ok

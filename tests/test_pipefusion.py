@@ -129,6 +129,141 @@ def test_cfg_parallel_composes_with_pipeline(dit_setup, cond, mesh1):
     assert diff < 0.05 * float(jnp.max(jnp.abs(ref))), diff
 
 
+def test_cfg_weights_match_classic_pair(dit_setup, cond, mesh1):
+    """cfg_weights=(g, 1-g) is the classic CFG pair, parallel or not."""
+    cfg, params = dit_setup
+    ctx = ParallelContext(mesh1, SP, "prefill")
+    key = jax.random.PRNGKey(17)
+    classic = sample(params, cfg, ctx, key=key, batch=2, seq_len=SEQ,
+                     cond=jnp.tile(cond, (2, 1, 1)),
+                     sc=SamplerConfig(num_steps=3, guidance_scale=4.0,
+                                      cfg_parallel=True))
+    weighted = sample(params, cfg, ctx, key=key, batch=2, seq_len=SEQ,
+                      cond=jnp.tile(cond, (2, 1, 1)),
+                      sc=SamplerConfig(num_steps=3,
+                                       cfg_weights=(4.0, -3.0),
+                                       cfg_parallel=True))
+    np.testing.assert_allclose(np.asarray(classic), np.asarray(weighted),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_cfg_degree_3_weighted_recombine(dit_setup, mesh1):
+    """k=3 guidance (two conditionings + uncond) == the hand-computed
+    weighted sum of three separate forwards, in both the cfg-parallel and
+    the sequential general-degree paths (ROADMAP k>2 item)."""
+    from repro.models.dit import dit_forward
+    from repro.serving.sampler import sample_step
+
+    cfg, params = dit_setup
+    ctx = ParallelContext(mesh1, SP, "prefill")
+    weights = (3.0, 1.5, -3.5)  # sums to 1: Σ g_i cond_i + (1-Σ g_i) uncond
+    c1 = jax.random.normal(jax.random.PRNGKey(21),
+                           (1, COND_TOKENS, cfg.d_model), jnp.float32)
+    c2 = jax.random.normal(jax.random.PRNGKey(22),
+                           (1, COND_TOKENS, cfg.d_model), jnp.float32)
+    conds = jnp.stack([c1, c2, jnp.zeros_like(c1)], axis=0)  # [3, B, C, d]
+    x = jax.random.normal(jax.random.PRNGKey(23), (1, SEQ, 64), jnp.float32)
+    tt = jnp.full((1,), 0.7, jnp.float32)
+    # hand-computed reference
+    v_ref = sum(
+        w * dit_forward(params, cfg, ctx, latents=x, cond=c, timesteps=tt)
+        for w, c in zip(weights, [c1, c2, jnp.zeros_like(c1)]))
+    x_ref = x - 0.1 * v_ref
+    for par in (True, False):
+        sc = SamplerConfig(num_steps=10, cfg_weights=weights,
+                           cfg_parallel=par)
+        assert sc.cfg_degree == 3 and sc.guided
+        x_new = sample_step(params, cfg, ctx, x, conds, jnp.float32(0.7),
+                            jnp.float32(0.1), sc)
+        np.testing.assert_allclose(np.asarray(x_new), np.asarray(x_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# (b2) staleness control: resync_every + the surfaced kv drift metric
+# ---------------------------------------------------------------------------
+
+def test_warm_step_schedule():
+    p = PipelineConfig(pp=2, warmup_steps=2, resync_every=3)
+    assert [p.warm_step(i) for i in range(9)] == [
+        True, True, False, False, True, False, False, True, False]
+    p0 = PipelineConfig(pp=2, warmup_steps=1)  # never re-sync (PipeFusion)
+    assert [p0.warm_step(i) for i in range(4)] == [True, False, False, False]
+    p1 = PipelineConfig(pp=2, warmup_steps=1, resync_every=1)
+    assert all(p1.warm_step(i) for i in range(4))  # every step synchronous
+
+
+def test_resync_every_step_matches_reference_bitwise(dit_setup, cond, mesh1):
+    """resync_every=1 forces every step synchronous => identical to the
+    plain sampler, staleness fully eliminated."""
+    cfg, params = dit_setup
+    ctx = ParallelContext(mesh1, SP, "prefill")
+    key = jax.random.PRNGKey(7)
+    ref = sample(params, cfg, ctx, key=key, batch=1, seq_len=SEQ, cond=cond,
+                 sc=SamplerConfig(num_steps=4))
+    resync = sample(params, cfg, ctx, key=key, batch=1, seq_len=SEQ,
+                    cond=cond,
+                    sc=SamplerConfig(num_steps=4,
+                                     pipeline=PipelineConfig(
+                                         pp=2, warmup_steps=1,
+                                         resync_every=1)))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(resync))
+
+
+def test_periodic_resync_tightens_displaced_error(dit_setup, cond, mesh1):
+    cfg, params = dit_setup
+    ctx = ParallelContext(mesh1, SP, "prefill")
+    key = jax.random.PRNGKey(7)
+    ref = sample(params, cfg, ctx, key=key, batch=1, seq_len=SEQ, cond=cond,
+                 sc=SamplerConfig(num_steps=6))
+
+    def err(resync):
+        out = sample(params, cfg, ctx, key=key, batch=1, seq_len=SEQ,
+                     cond=cond,
+                     sc=SamplerConfig(num_steps=6,
+                                      pipeline=PipelineConfig(
+                                          pp=2, warmup_steps=1,
+                                          resync_every=resync)))
+        return float(jnp.max(jnp.abs(out - ref)))
+
+    assert err(2) <= err(0) + 1e-7  # periodic re-sync never hurts
+
+
+def test_kv_drift_per_item_isolates_batch_elements():
+    """The per-request drift breakdown must not average one request's
+    staleness into another's (the serving policy acts per request)."""
+    from repro.core.pipefusion import KVState, kv_drift
+
+    k = jnp.ones((2, 3, 4, 2, 2))  # [L, B=3, T, H, D]
+    old = KVState(k=k, v=k)
+    new_k = k.at[:, 1].add(1.0)  # only batch element 1 drifts
+    new = KVState(k=new_k, v=k)
+    per = kv_drift(old, new, per_item=True)
+    assert per.shape == (3,)
+    assert float(per[0]) == 0.0 and float(per[2]) == 0.0
+    assert float(per[1]) > 0.0
+    scalar = kv_drift(old, new)
+    assert 0.0 < float(scalar) < float(per[1])
+
+
+def test_sampler_surfaces_kv_drift(dit_setup, cond, mesh1):
+    cfg, params = dit_setup
+    ctx = ParallelContext(mesh1, SP, "prefill")
+    metrics: list[dict] = []
+    sample(params, cfg, ctx, key=jax.random.PRNGKey(5), batch=1, seq_len=SEQ,
+           cond=cond,
+           sc=SamplerConfig(num_steps=4,
+                            pipeline=PipelineConfig(pp=2, warmup_steps=1,
+                                                    resync_every=2)),
+           metrics=metrics)
+    assert [m["step"] for m in metrics] == [0, 1, 2, 3]
+    assert [m["warm"] for m in metrics] == [True, False, True, False]
+    assert all(m["kv_drift"] == 0.0 for m in metrics if m["warm"])
+    displaced = [m["kv_drift"] for m in metrics if not m["warm"]]
+    assert displaced and all(d > 0.0 for d in displaced)
+    assert all(len(m["kv_drift_per_request"]) == 1 for m in metrics)
+
+
 def test_pipelined_sequential_cfg_rejected(dit_setup, cond, mesh1):
     cfg, params = dit_setup
     ctx = ParallelContext(mesh1, SP, "prefill")
