@@ -4,12 +4,23 @@ each method's optimal distributed configuration, M = 1..4 machines.
 Latency from the calibrated two-level network model; derived column shows
 speedup over USP (the paper reports TAS 1.27x, SFU 1.35x mean on >2
 machines — asserted directionally in tests/test_comm_model.py).
+
+``python -m benchmarks.e2e_latency --calibration fit.json`` swaps the
+nominal testbed constants for parameters fitted from recorded
+BENCH_*.json measurements by ``scripts/calibrate_comm.py``.
 """
 from __future__ import annotations
 
+import argparse
+
 from repro.configs import get_config
 from repro.core import plan, usp_plan
-from repro.core.comm_model import LayerWorkload, attention_layer_latency
+from repro.core.comm_model import (
+    LayerWorkload,
+    NetworkModel,
+    attention_layer_latency,
+    load_network_model,
+)
 
 from .common import row
 
@@ -22,31 +33,51 @@ WORKLOADS = {
 }
 
 
-def _layer_latency(arch, seq, batch, n, method):
+def _layer_latency(arch, seq, batch, n, method, net: NetworkModel):
     cfg = get_config(arch)
     wl = LayerWorkload(batch=batch, seq=seq, heads=cfg.n_heads,
                        head_dim=cfg.resolved_head_dim)
     if method == "usp":
         p = usp_plan(n, M_PER, cfg.n_heads)
-        r = attention_layer_latency(p, wl, swift=False, overlap_inter=False)
+        r = attention_layer_latency(p, wl, net, swift=False,
+                                    overlap_inter=False)
     elif method == "tas":
         p = plan(n, M_PER, cfg.n_heads)
-        r = attention_layer_latency(p, wl, swift=True, overlap_inter=False)
+        r = attention_layer_latency(p, wl, net, swift=True,
+                                    overlap_inter=False)
     else:  # sfu = tas + torus overlap + one-sided
         p = plan(n, M_PER, cfg.n_heads)
-        r = attention_layer_latency(p, wl, swift=True, overlap_inter=True)
+        r = attention_layer_latency(p, wl, net, swift=True,
+                                    overlap_inter=True)
     return r["t_total"]
 
 
-def run() -> list[str]:
+def run(net: NetworkModel | None = None) -> list[str]:
+    net = net or NetworkModel()
     rows = []
     for wname, (arch, seq, batch) in WORKLOADS.items():
         cfg = get_config(arch)
         for n in (1, 2, 3, 4):
-            base = _layer_latency(arch, seq, batch, n, "usp") * cfg.n_layers
+            base = _layer_latency(arch, seq, batch, n, "usp", net) * cfg.n_layers
             for method in ("usp", "tas", "sfu"):
-                t = _layer_latency(arch, seq, batch, n, method) * cfg.n_layers
+                t = _layer_latency(arch, seq, batch, n, method, net) * cfg.n_layers
                 sp = base / t if t else 0.0
                 rows.append(row(f"e2e/{wname}/M{n}/{method}", t * 1e6,
                                 f"speedup_vs_usp={sp:.2f}x"))
     return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibration", default=None, metavar="JSON",
+                    help="NetworkModel JSON from scripts/calibrate_comm.py; "
+                         "prints calibrated instead of nominal predictions")
+    args = ap.parse_args(argv)
+    net = load_network_model(args.calibration) if args.calibration else None
+    print("name,us_per_call,derived")
+    for line in run(net):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,13 +17,22 @@ sub-mesh never leaves the machine, wins by multiples.
 
 Rows: ``hybrid_sweep/<wl>/N<n>/<plan>`` with us = predicted step latency
 and derived = speedup over the SP-only plan (see EXPERIMENTS.md).
+
+``python -m benchmarks.hybrid_sweep --calibration fit.json`` prints the
+same rows under a calibrated ``NetworkModel`` (the JSON written by
+``scripts/calibrate_comm.py`` from recorded BENCH_*.json measurements)
+instead of the nominal testbed constants.
 """
 from __future__ import annotations
+
+import argparse
 
 from repro.core import plan, plan_hybrid
 from repro.core.comm_model import (
     LayerWorkload,
+    NetworkModel,
     hybrid_step_latency,
+    load_network_model,
     sp_step_latency,
 )
 
@@ -41,12 +50,13 @@ WORKLOADS = {
 M_PER_MACHINE = 8  # paper testbed: 8 GPUs per machine
 
 
-def _sweep():
+def _sweep(net: NetworkModel | None = None):
     """Yield (name, workload-name, n, plan-dict, prediction-dict) points."""
+    net = net or NetworkModel()
     for wname, (wl, n_layers) in WORKLOADS.items():
         for n in (2, 4):
             sp_only = plan(n, M_PER_MACHINE, wl.heads)
-            base = sp_step_latency(sp_only, wl, n_layers=n_layers,
+            base = sp_step_latency(sp_only, wl, net, n_layers=n_layers,
                                    guided=True)
             yield (wname, n, wl, n_layers, "sp_only",
                    {"cfg": 1, "pp": 1, "p_ulysses": sp_only.p_ulysses,
@@ -58,16 +68,16 @@ def _sweep():
             for pname, kw in plans.items():
                 h = plan_hybrid(n, M_PER_MACHINE, wl.heads,
                                 n_layers=n_layers, **kw)
-                pred = hybrid_step_latency(h, wl, n_layers=n_layers,
+                pred = hybrid_step_latency(h, wl, net, n_layers=n_layers,
                                            guided=True)
                 yield (wname, n, wl, n_layers, pname,
                        {"cfg": h.cfg, "pp": h.pp, "p_ulysses": h.sp.p_ulysses,
                         "p_ring": h.sp.p_ring}, pred, base)
 
 
-def run() -> list[str]:
+def run(net: NetworkModel | None = None) -> list[str]:
     rows = []
-    for wname, n, wl, n_layers, pname, pl, pred, base in _sweep():
+    for wname, n, wl, n_layers, pname, pl, pred, base in _sweep(net):
         if pname == "sp_only":
             rows.append(row(f"hybrid_sweep/{wname}/N{n}/sp_only",
                             pred["t_step"] * 1e6,
@@ -80,14 +90,14 @@ def run() -> list[str]:
     return rows
 
 
-def records() -> list[dict]:
+def records(net: NetworkModel | None = None) -> list[dict]:
     """Structured trajectory records for BENCH_hybrid_sweep.json: one entry
     per swept configuration, pairing the config with the comm-model
     prediction breakdown.  ``measured_step_us`` is null on this CPU
     container — the field exists so multi-machine runs can fill it in and
-    the ROADMAP calibration item has a fit target."""
+    ``scripts/calibrate_comm.py`` has a fit target."""
     out = []
-    for wname, n, wl, n_layers, pname, pl, pred, _ in _sweep():
+    for wname, n, wl, n_layers, pname, pl, pred, _ in _sweep(net):
         out.append({
             "name": f"hybrid_sweep/{wname}/N{n}/{pname}",
             "workload": {"batch": wl.batch, "seq": wl.seq, "heads": wl.heads,
@@ -101,3 +111,19 @@ def records() -> list[dict]:
             "measured_step_us": None,
         })
     return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibration", default=None, metavar="JSON",
+                    help="NetworkModel JSON from scripts/calibrate_comm.py; "
+                         "prints calibrated instead of nominal predictions")
+    args = ap.parse_args(argv)
+    net = load_network_model(args.calibration) if args.calibration else None
+    print("name,us_per_call,derived")
+    for line in run(net):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

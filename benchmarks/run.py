@@ -70,6 +70,7 @@ def main(argv: list[str] | None = None) -> None:
         kernel_bench,
         layerwise,
         roofline_table,
+        sched_sweep,
     )
 
     modules = {
@@ -81,6 +82,7 @@ def main(argv: list[str] | None = None) -> None:
         "kernel_bench (Fig 12)": kernel_bench,
         "roofline_table (assignment)": roofline_table,
         "hybrid_sweep (beyond-paper, DESIGN.md §7)": hybrid_sweep,
+        "sched_sweep (beyond-paper, DESIGN.md §9)": sched_sweep,
     }
     print("name,us_per_call,derived")
     ok = True

@@ -1,8 +1,10 @@
 """Serve a small DiT through the hybrid-parallel engine — the paper's
 scenario (Figure 1) plus the beyond-paper hybrid axes (DESIGN.md §7):
-requests -> batched flow-matching sampling with swift_torus SP composed
-with CFG parallelism and displaced patch pipelining -> latents -> toy VAE
-decode.
+mixed-resolution requests with SLA deadlines -> the request scheduler
+(DESIGN.md §9: resolution buckets, deadline-scored admission, per-bucket
+plan cache, drift-triggered resync) -> batched flow-matching sampling
+with swift_torus SP composed with CFG parallelism and displaced patch
+pipelining -> latents -> toy VAE decode.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_dit.py
@@ -22,7 +24,13 @@ from repro.configs import get_reduced
 from repro.core import PipelineConfig, SPConfig, plan_hybrid
 from repro.launch.mesh import make_hybrid_mesh
 from repro.models import get_model
-from repro.serving import DiTRequest, DiTServer, SamplerConfig, toy_vae_decode
+from repro.serving import (
+    DiTRequest,
+    DiTServer,
+    DriftPolicy,
+    SamplerConfig,
+    toy_vae_decode,
+)
 
 
 def main():
@@ -48,20 +56,34 @@ def main():
                     sampler=SamplerConfig(
                         num_steps=4, guidance_scale=5.0, cfg_parallel=True,
                         pipeline=PipelineConfig(pp=2, warmup_steps=1)),
-                    max_batch=2, param_axes=axes)
+                    max_batch=2, param_axes=axes,
+                    drift=DriftPolicy(threshold=0.1))
 
-    # a mixed queue: two "image" sizes (latent sequence lengths)
-    for i in range(5):
-        srv.submit(DiTRequest(rid=i, seq_len=64 if i % 2 else 128))
+    # a mixed-resolution queue with per-request SLAs: three "image" sizes;
+    # the scheduler buckets by latent length, admits by deadline slack,
+    # and caches one compiled step + plan per bucket shape (DESIGN.md §9)
+    sizes = [64, 128, 256]
+    # generous SLAs: on this CPU container the first batch per bucket pays
+    # its jit trace inside the request latency
+    slas = {64: 30.0, 128: 60.0, 256: 90.0}
+    for i in range(6):
+        n = sizes[i % len(sizes)]
+        srv.submit(DiTRequest(rid=i, seq_len=n, sla=slas[n],
+                              drift_threshold=0.1))
     results = srv.serve()
     for r in sorted(results, key=lambda r: r.rid):
         px = toy_vae_decode(r.latents[None])
         print(f"request {r.rid}: latents {tuple(r.latents.shape)} -> "
               f"pixels {tuple(px.shape)}  "
-              f"latency {r.latency * 1e3:.1f} ms  finite="
+              f"latency {r.latency * 1e3:.1f} ms  sla_met={r.sla_met}  "
+              f"resyncs={r.resyncs}  finite="
               f"{bool(jnp.all(jnp.isfinite(r.latents)))}")
+    tot = srv.scheduler.totals()
     print(f"\nserved {len(results)} requests with swift_torus SP x "
-          f"cfg_parallel x pp={h.pp} over {mesh.devices.size} devices")
+          f"cfg_parallel x pp={h.pp} over {mesh.devices.size} devices; "
+          f"{tot.batches} batches over {len(srv.plan_cache.plans)} bucket "
+          f"shapes ({srv.plan_cache.traces} traces, "
+          f"{srv.plan_cache.hits} step-cache hits)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Fit NetworkModel parameters to measured BENCH_*.json step latencies
+(ROADMAP comm-model calibration item; DESIGN.md §9 uses the result to
+score scheduler admissions with calibrated rather than nominal numbers).
+
+``benchmarks/run.py`` emits per-config BENCH_<module>.json trajectory
+records whose ``measured_step_us`` field multi-machine runs fill in.
+This script least-squares-fits (intra_bw, inter_bw, intra_lat, inter_lat,
+mfu) so the analytical model reproduces those measurements:
+
+    python scripts/calibrate_comm.py BENCH_hybrid_sweep.json \
+        --out calibration.json
+    python -m benchmarks.hybrid_sweep --calibration calibration.json
+    python -m benchmarks.e2e_latency  --calibration calibration.json
+
+Method: damped Gauss-Newton on log-parameters with log-ratio residuals
+``log(pred/measured)`` (numpy only — no scipy in the container).  Log
+space keeps every parameter positive and makes the fit scale-free across
+the many orders of magnitude between bandwidths and hop latencies; the
+damping keeps parameters the records cannot identify (e.g. intra_bw when
+every record models intra traffic as overlapped, or hop latencies in
+bandwidth-bound configs) pinned near their nominal start instead of
+wandering.
+
+The regression test (tests/test_calibration.py) pins the fitted/nominal
+ratios on a checked-in fixture generated from a known ground-truth model.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.comm_model import (  # noqa: E402
+    LayerWorkload,
+    NetworkModel,
+    plan_step_latency,
+)
+from repro.core.planner import plan_hybrid  # noqa: E402
+
+FIT_PARAMS = ("intra_bw", "inter_bw", "intra_lat", "inter_lat", "mfu")
+
+
+def load_records(paths: list[pathlib.Path]) -> list[dict]:
+    """Records with a fit target, from any mix of BENCH_*.json files."""
+    out = []
+    for p in paths:
+        payload = json.loads(p.read_text())
+        for rec in payload.get("records", []):
+            if rec.get("measured_step_us") is None:
+                continue
+            if "workload" not in rec or "plan" not in rec:
+                continue
+            out.append(rec)
+    return out
+
+
+def predict_us(rec: dict, net: NetworkModel) -> float:
+    """Re-run the comm model on one record's configuration.
+
+    The (cfg, pp) split is re-planned with ``plan_hybrid`` — deterministic
+    given the recorded cluster shape — so the prediction path is exactly
+    the one the sweeps used when the record was written."""
+    wl = rec["workload"]
+    w = LayerWorkload(batch=wl["batch"], seq=wl["seq"], heads=wl["heads"],
+                      head_dim=wl["head_dim"])
+    pl = rec["plan"]
+    h = plan_hybrid(rec["n_machines"], rec["m_per_machine"], wl["heads"],
+                    cfg_parallel=pl["cfg"] > 1, cfg_degree=max(pl["cfg"], 2),
+                    pp=pl["pp"], n_layers=wl["n_layers"])
+    assert (h.sp.p_ulysses, h.sp.p_ring) == (pl["p_ulysses"], pl["p_ring"]), (
+        f"{rec['name']}: re-planned SP split {h.sp.p_ulysses}x{h.sp.p_ring} "
+        f"!= recorded {pl['p_ulysses']}x{pl['p_ring']}")
+    pred = plan_step_latency(h, w, net, n_layers=wl["n_layers"], guided=True,
+                             num_patches=pl.get("num_patches"))
+    return pred["t_step"] * 1e6
+
+
+def _net_from_theta(theta: np.ndarray) -> NetworkModel:
+    return dataclasses.replace(
+        NetworkModel(), **{k: float(math.exp(v))
+                           for k, v in zip(FIT_PARAMS, theta)})
+
+
+def _residuals(theta: np.ndarray, recs: list[dict]) -> np.ndarray:
+    net = _net_from_theta(theta)
+    return np.array([
+        math.log(predict_us(r, net) / r["measured_step_us"]) for r in recs])
+
+
+def fit(recs: list[dict], *, iters: int = 40, damping: float = 1e-3,
+        fd_eps: float = 1e-5) -> tuple[NetworkModel, dict]:
+    """Least-squares fit; returns (model, report).
+
+    Gauss-Newton with Levenberg damping; the Jacobian is finite-differenced
+    in log-parameter space (5 params x len(recs) residuals).
+    """
+    assert recs, "no records with measured_step_us — nothing to fit"
+    nominal = NetworkModel()
+    theta = np.array([math.log(getattr(nominal, k)) for k in FIT_PARAMS])
+    r = _residuals(theta, recs)
+    for _ in range(iters):
+        jac = np.empty((len(recs), len(theta)))
+        for j in range(len(theta)):
+            t2 = theta.copy()
+            t2[j] += fd_eps
+            jac[:, j] = (_residuals(t2, recs) - r) / fd_eps
+        a = np.vstack([jac, math.sqrt(damping) * np.eye(len(theta))])
+        b = np.concatenate([-r, np.zeros(len(theta))])
+        step, *_ = np.linalg.lstsq(a, b, rcond=None)
+        if not np.all(np.isfinite(step)):
+            break
+        theta = theta + step
+        r = _residuals(theta, recs)
+        if np.linalg.norm(step) < 1e-10:
+            break
+    net = _net_from_theta(theta)
+    report = {
+        "n_records": len(recs),
+        "rms_rel_error": float(math.sqrt(float(np.mean(r ** 2)))),
+        "ratio_vs_nominal": {
+            k: getattr(net, k) / getattr(nominal, k) for k in FIT_PARAMS},
+    }
+    return net, report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="+", type=pathlib.Path,
+                    help="BENCH_*.json files with measured_step_us filled in")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write the fitted NetworkModel JSON here "
+                         "(stdout otherwise)")
+    args = ap.parse_args(argv)
+    recs = load_records(args.bench)
+    if not recs:
+        print("no records with measured_step_us in "
+              f"{[str(p) for p in args.bench]}", file=sys.stderr)
+        return 1
+    net, report = fit(recs)
+    payload = {k: getattr(net, k) for k in FIT_PARAMS}
+    payload["fit"] = report
+    text = json.dumps(payload, indent=1, sort_keys=True)
+    if args.out:
+        args.out.write_text(text)
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    print(f"fit: {report['n_records']} records, rms rel error "
+          f"{report['rms_rel_error']:.4f}", file=sys.stderr)
+    for k, v in report["ratio_vs_nominal"].items():
+        print(f"  {k}: x{v:.3f} vs nominal", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

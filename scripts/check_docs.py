@@ -28,8 +28,10 @@ def main() -> int:
     have = {name: sections(ROOT / f"{name}.md")
             for name in ("DESIGN", "EXPERIMENTS")}
     errors = []
-    for py in sorted((ROOT / "src").rglob("*.py")) + sorted(
-            (ROOT / "benchmarks").rglob("*.py")):
+    scanned = []
+    for d in ("src", "benchmarks", "scripts", "examples"):
+        scanned += sorted((ROOT / d).rglob("*.py"))
+    for py in scanned:
         text = py.read_text()
         for m in REF_RE.finditer(text):
             name, sec = m.group(1), m.group(2)

@@ -11,7 +11,15 @@ Public API:
 """
 from .decode import decode_attention
 from .pipefusion import KVState, PipelineConfig
-from .planner import HybridPlan, SPPlan, plan, plan_hybrid, usp_plan
+from .planner import (
+    HybridPlan,
+    SPPlan,
+    candidate_hybrid_plans,
+    plan,
+    plan_for_shape,
+    plan_hybrid,
+    usp_plan,
+)
 from .softmax import (
     MaskSpec,
     Partial,
@@ -32,6 +40,8 @@ __all__ = [
     "SPConfig",
     "SPPlan",
     "STRATEGIES",
+    "candidate_hybrid_plans",
+    "plan_for_shape",
     "plan_hybrid",
     "attend_partial",
     "decode_attention",

@@ -8,10 +8,18 @@ Figures 7/8/10 without multi-machine hardware.
 All volumes are **elements per GPU** (multiply by bytes/elem for bytes), in
 terms of B (batch), L (global sequence), H (heads), D (head dim), N
 (machines), M (devices per machine), P_u, P_r (Ulysses/Ring degrees).
+
+``plan_step_latency`` is the unified scoring entry point the request
+scheduler's plan cache and admission policy consume (DESIGN.md §9);
+``load_network_model`` loads the parameters ``scripts/calibrate_comm.py``
+fits from recorded ``BENCH_*.json`` step measurements, replacing the
+testbed-equivalent defaults with calibrated ones.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 
 from .planner import HybridPlan, SPPlan
 
@@ -257,3 +265,51 @@ def hybrid_step_latency(
                              + (cfg_recombine_volume(wl)
                                 if guided and hplan.cfg_inter else 0.0)),
     }
+
+
+# ---------------------------------------------------------------------------
+# scheduler scoring API (DESIGN.md §9) + calibration loading
+# ---------------------------------------------------------------------------
+
+def plan_step_latency(
+    hplan: HybridPlan,
+    wl: LayerWorkload,
+    net: NetworkModel = NetworkModel(),
+    *,
+    n_layers: int,
+    guided: bool = True,
+    guidance_branches: int = 2,
+    num_patches: int | None = None,
+    num_steps: int = 20,
+) -> dict[str, float]:
+    """Predicted per-sampler-step latency of ANY hybrid plan — the single
+    entry point the request scheduler scores candidate plans through.
+
+    Dispatches to ``sp_step_latency`` for degenerate (cfg=1, pp=1) plans
+    and ``hybrid_step_latency`` otherwise; both return a dict whose
+    ``t_step`` is the admission policy's scoring quantity.
+    """
+    if hplan.cfg == 1 and hplan.pp == 1:
+        return sp_step_latency(
+            hplan.sp, wl, net, n_layers=n_layers, guided=guided,
+            guidance_branches=guidance_branches,
+            swift=hplan.sp.ulysses_inter)
+    return hybrid_step_latency(
+        hplan, wl, net, n_layers=n_layers, guided=guided,
+        guidance_branches=guidance_branches, num_patches=num_patches,
+        num_steps=num_steps)
+
+
+def network_model_from_dict(d: dict) -> NetworkModel:
+    """NetworkModel with any subset of fields overridden; non-field keys
+    (e.g. the fit report ``calibrate_comm.py`` attaches) are ignored."""
+    fields = {f.name for f in dataclasses.fields(NetworkModel)}
+    return dataclasses.replace(
+        NetworkModel(), **{k: v for k, v in d.items() if k in fields})
+
+
+def load_network_model(path: str | pathlib.Path) -> NetworkModel:
+    """Load a calibration JSON written by ``scripts/calibrate_comm.py``
+    (the ``--calibration`` flag of the benchmark sweeps)."""
+    return network_model_from_dict(
+        json.loads(pathlib.Path(path).read_text()))

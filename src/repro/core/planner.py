@@ -198,3 +198,87 @@ def plan_hybrid(
     )
     h.validate()
     return h
+
+
+# ---------------------------------------------------------------------------
+# per-shape plan selection (DESIGN.md §9): the scheduler's entry point
+# ---------------------------------------------------------------------------
+
+def candidate_hybrid_plans(
+    n_machines: int,
+    m_per_machine: int,
+    num_q_heads: int,
+    num_kv_heads: int | None = None,
+    *,
+    n_layers: int | None = None,
+    cfg_degree: int = 2,
+    max_pp: int = 4,
+    swift: bool = True,
+    replicate_kv: bool = False,
+) -> list[HybridPlan]:
+    """Every feasible (cfg, pp) split of the cluster, deduplicated by the
+    resulting (cfg, pp, P_u, P_r) — the candidate set ``plan_for_shape``
+    and the scheduler's plan cache score per bucket.  Each candidate's SP
+    sub-plan keeps the §4.2 TAS/Torus placement."""
+    pps = [1]
+    while pps[-1] * 2 <= max_pp:
+        pps.append(pps[-1] * 2)
+    seen, out = set(), []
+    for cfg_parallel in (False, True):
+        for pp in pps:
+            try:
+                h = plan_hybrid(
+                    n_machines, m_per_machine, num_q_heads, num_kv_heads,
+                    cfg_parallel=cfg_parallel, cfg_degree=cfg_degree, pp=pp,
+                    n_layers=n_layers, swift=swift, replicate_kv=replicate_kv)
+            except ValueError:
+                continue
+            key = (h.cfg, h.pp, h.sp.p_ulysses, h.sp.p_ring)
+            if key not in seen:
+                seen.add(key)
+                out.append(h)
+    return out
+
+
+def plan_for_shape(
+    n_machines: int,
+    m_per_machine: int,
+    num_q_heads: int,
+    num_kv_heads: int | None = None,
+    *,
+    seq: int,
+    batch: int = 1,
+    head_dim: int,
+    n_layers: int,
+    net=None,
+    guided: bool = True,
+    guidance_branches: int = 2,
+    num_steps: int = 20,
+    candidates: list[HybridPlan] | None = None,
+    cfg_degree: int = 2,
+    max_pp: int = 4,
+    swift: bool = True,
+) -> tuple[HybridPlan, dict]:
+    """Select the (cfg, pp, P_u, P_r) plan with the lowest predicted step
+    latency FOR A SPECIFIC WORKLOAD SHAPE (batch, seq) — the per-bucket
+    planning entry the request scheduler uses: plan_hybrid is shape-blind
+    (it factors devices), but which factorisation wins depends on the
+    sequence length through the comm model.  Returns (plan, prediction).
+    """
+    from .comm_model import LayerWorkload, NetworkModel, plan_step_latency
+
+    net = net or NetworkModel()
+    cands = candidates if candidates is not None else candidate_hybrid_plans(
+        n_machines, m_per_machine, num_q_heads, num_kv_heads,
+        n_layers=n_layers, cfg_degree=cfg_degree, max_pp=max_pp, swift=swift)
+    assert cands, "no feasible hybrid plan"
+    wl = LayerWorkload(batch=batch, seq=seq, heads=num_q_heads,
+                       head_dim=head_dim)
+    best: tuple[HybridPlan, dict] | None = None
+    for h in cands:
+        pred = plan_step_latency(
+            h, wl, net, n_layers=n_layers, guided=guided,
+            guidance_branches=guidance_branches, num_steps=num_steps)
+        if best is None or pred["t_step"] < best[1]["t_step"]:
+            best = (h, pred)
+    return best

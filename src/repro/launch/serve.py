@@ -2,7 +2,15 @@
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.serve --arch flux-12b --reduced --requests 4
+    ... --arch flux-12b --reduced --requests 6 --mixed --sla 30   (scheduler)
     ... --arch qwen2-1.5b --reduced --requests 4   (AR decode)
+
+DiT requests go through the SLA-aware request scheduler (DESIGN.md §9):
+``--mixed`` submits a mixed-resolution queue (seq, seq/2, 2*seq cycling)
+so the resolution bucketer and per-bucket plan cache are exercised;
+``--sla`` attaches a deadline to every request and the admission policy
+scores buckets by deadline slack against the comm model's predicted
+batch latency.
 """
 from __future__ import annotations
 
@@ -29,6 +37,10 @@ def main():
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--steps", type=int, default=4, help="sampling steps (DiT)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-resolution queue (exercises the bucketer)")
+    ap.add_argument("--sla", type=float, default=None,
+                    help="deadline (s) attached to every DiT request")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -49,11 +61,21 @@ def main():
     if cfg.family == "dit":
         srv = DiTServer(params, cfg, mesh, sp,
                         sampler=SamplerConfig(num_steps=args.steps))
+        lens = ([args.seq, args.seq // 2, args.seq * 2] if args.mixed
+                else [args.seq])
         for i in range(args.requests):
-            srv.submit(DiTRequest(rid=i, seq_len=args.seq))
-        for r in srv.serve():
+            srv.submit(DiTRequest(rid=i, seq_len=lens[i % len(lens)],
+                                  sla=args.sla))
+        for r in sorted(srv.serve(), key=lambda r: r.rid):
             print(f"request {r.rid}: latents {tuple(r.latents.shape)} "
-                  f"latency {r.latency * 1e3:.1f} ms")
+                  f"latency {r.latency * 1e3:.1f} ms"
+                  + ("" if r.sla_met else "  SLA MISSED"))
+        tot = srv.scheduler.totals()
+        print(f"scheduler: {tot.batches} batches over "
+              f"{len(srv.plan_cache.plans)} bucket shapes "
+              f"({srv.plan_cache.traces} traces, {srv.plan_cache.hits} "
+              f"step-cache hits), {tot.padded_rows} padded rows, "
+              f"max wait {tot.max_wait * 1e3:.1f} ms")
     else:
         srv = ARServer(params, cfg, mesh, sp, batch_slots=4,
                        max_len=args.seq)

@@ -7,6 +7,13 @@ from .sampler import (
     sample_step,
     toy_vae_decode,
 )
+from .sched import (
+    DriftPolicy,
+    PlanCache,
+    PlanChoice,
+    RequestScheduler,
+    SchedConfig,
+)
 
 __all__ = [
     "ARRequest",
@@ -14,7 +21,12 @@ __all__ = [
     "DiTRequest",
     "DiTResult",
     "DiTServer",
+    "DriftPolicy",
+    "PlanCache",
+    "PlanChoice",
+    "RequestScheduler",
     "SamplerConfig",
+    "SchedConfig",
     "hybrid_sample_step",
     "hybrid_state_shape",
     "sample",

@@ -1,27 +1,33 @@
 """Serving engines.
 
 DiTServer — the paper's scenario: requests ask for an image/video at a
-given latent sequence length; compatible requests (same length) are
-batched, the flow-matching sampler runs with the configured SP strategy,
-and results stream back.  One jitted step per (batch, seq) bucket.
+given latent sequence length; the SLA-aware request scheduler
+(serving/sched, DESIGN.md §9) buckets them by latent length, admits
+across buckets against per-request deadlines, and memoizes one compiled
+step per bucket shape; the flow-matching sampler runs with the configured
+SP strategy and results stream back.
 
 ARServer — autoregressive decode for the LM-family assigned archs:
 slot-based continuous batching (fixed B decode slots; prefill on admit;
 every engine tick advances all active slots one token through the
-sequence-sharded KV cache).
+sequence-sharded KV cache).  Slot admission is priority-ordered with
+aging (shared with the DiT scheduler's starvation accounting), so no
+request can be bypassed indefinitely.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..core import SPConfig
+from ..core import SPConfig, plan_hybrid
+from ..core.comm_model import NetworkModel
 from ..models import ParallelContext, get_model, param_shardings
 from ..models.dit import COND_TOKENS
 from .sampler import (
@@ -29,6 +35,14 @@ from .sampler import (
     hybrid_sample_step,
     hybrid_state_shape,
     sample_step,
+)
+from .sched import (
+    DriftPolicy,
+    PlanCache,
+    PlanChoice,
+    RequestScheduler,
+    SchedConfig,
+    aged_priority,
 )
 
 
@@ -42,6 +56,13 @@ class DiTRequest:
     seq_len: int  # latent tokens (resolution / duration proxy)
     cond: jax.Array | None = None  # [COND_TOKENS, d] text embedding (stub)
     submitted: float = 0.0
+    # SLA: seconds from submission to deadline; None = best-effort.  The
+    # admission policy scores deadline slack with the comm model's
+    # predicted batch latency (DESIGN.md §9).
+    sla: float | None = None
+    # per-request KV-staleness bound for the displaced pipeline; crossing
+    # it triggers a resync step (None = the server DriftPolicy's default)
+    drift_threshold: float | None = None
 
 
 @dataclasses.dataclass
@@ -53,37 +74,47 @@ class DiTResult:
     # per-step KV staleness trajectory of the displaced pipeline (empty for
     # non-pipelined sampling); see core/pipefusion.kv_drift
     kv_drift: list[float] = dataclasses.field(default_factory=list)
+    # warm steps the drift policy injected after warmup (0 under the
+    # static resync_every schedule)
+    resyncs: int = 0
+    # whether the request's deadline (submitted + sla) was met
+    sla_met: bool = True
 
 
 class DiTServer:
     """Batched DiT sampling over the hybrid-parallel mesh (DESIGN.md §7).
 
-    Beyond plain SP the server drives two optional extra axes:
-      * ``sampler.cfg_parallel`` — the CFG pair is evaluated on the
-        ``sp.cfg_axis`` halves of the mesh (one psum-style recombine per
+    Request intake and batching are delegated to the scheduler subsystem
+    (DESIGN.md §9): ``submit`` feeds the bucketer, ``run_once`` asks the
+    admission policy for the next (bucket, batch) under SLA/starvation
+    rules, and compiled steps come from the plan cache (one trace per
+    bucket shape).  Beyond plain SP the server drives two optional extra
+    axes:
+
+      * ``sampler.cfg_parallel`` — the CFG branches are evaluated on the
+        ``sp.cfg_axis`` slices of the mesh (one psum-style recombine per
         step).
       * ``sampler.pipeline`` — displaced patch pipelining: the server jits
         warm/displaced step variants per (batch, seq) bucket and threads
         the per-layer stale-KV state across the sampling loop.  When the
         mesh carries ``sp.pp_axis`` and ``param_axes`` is given, the
         stacked DiT block weights are sharded over the pipe axis, so each
-        stage holds n_layers / pp blocks.
+        stage holds n_layers / pp blocks.  The per-bucket plan choice
+        co-selects the patch count for that bucket's latent length.
     """
 
     def __init__(self, params, cfg: ModelConfig, mesh, sp: SPConfig,
                  sampler: SamplerConfig = SamplerConfig(),
-                 max_batch: int = 4, param_axes=None):
+                 max_batch: int = 4, param_axes=None,
+                 sched: SchedConfig | None = None,
+                 drift: DriftPolicy | None = None,
+                 net: NetworkModel | None = None):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "prefill")
         self.sampler = sampler
-        self.max_batch = max_batch
-        self.queue: deque[DiTRequest] = deque()
-        # plain sampling caches one jitted step; pipelined sampling caches a
-        # (warm, displaced) pair
-        self._step_cache: dict[
-            tuple[int, int], Callable | tuple[Callable, Callable]] = {}
         self._rng = jax.random.PRNGKey(0)
+        self.drift = drift if drift is not None else DriftPolicy()
         if (sampler.pipelined and sp.pp_axis
                 and sp.pp_axis in mesh.axis_names and param_axes is not None):
             # stage partitioning: each pipe rank holds its n_layers/pp blocks
@@ -91,69 +122,94 @@ class DiTServer:
                                  extra_rules={"layers": (sp.pp_axis,)})
             self.params = jax.device_put(params, sh)
 
+        # -- scheduler wiring (DESIGN.md §9) -----------------------------
+        dp = self._dp_degree()
+        sched = sched if sched is not None else SchedConfig(max_batch=max_batch)
+        self.sched_cfg = dataclasses.replace(sched, dp=dp)
+        pipe = sampler.pipeline if sampler.pipelined else None
+        cfg_deg = (sampler.cfg_degree
+                   if (sampler.guided and sampler.cfg_parallel) else 1)
+        pp = pipe.pp if pipe else 1
+        sp_deg = math.prod(mesh.shape[a] for a in sp.sp_axes)
+        # the one plan this mesh/sampler can execute; planned as 1 machine
+        # x (cfg*pp*sp) devices — the per-bucket degree of freedom left to
+        # the plan cache is the patch count (and the predicted latency the
+        # admission policy scores)
+        fixed = plan_hybrid(1, cfg_deg * pp * sp_deg, cfg.n_heads,
+                            cfg.n_kv_heads, cfg_parallel=cfg_deg > 1,
+                            cfg_degree=max(cfg_deg, 2), pp=pp,
+                            n_layers=cfg.n_layers)
+        self.plan_cache = PlanCache(
+            heads=cfg.n_heads, head_dim=cfg.resolved_head_dim,
+            kv_heads=cfg.n_kv_heads, n_layers=cfg.n_layers,
+            num_steps=sampler.num_steps, guided=sampler.guided,
+            guidance_branches=sampler.cfg_degree, dp=dp, net=net,
+            candidates=[fixed], base_patches=pipe.patches if pipe else 0)
+        self.scheduler = RequestScheduler(self.plan_cache, self.sched_cfg)
+
     def submit(self, req: DiTRequest) -> None:
-        req.submitted = time.time()
-        self.queue.append(req)
+        self.scheduler.submit(req, time.time())
 
-    def _step_fn(self, batch: int, seq: int) -> Callable:
-        key = (batch, seq)
-        if key not in self._step_cache:
-            dt = 1.0 / self.sampler.num_steps
+    @property
+    def pending(self) -> int:
+        return self.scheduler.pending
 
-            if self.sampler.pipelined:
+    def _bucket_sampler(self, choice: PlanChoice) -> SamplerConfig:
+        """The sampler config for one bucket: the server config with the
+        plan cache's per-bucket patch count applied."""
+        if not (self.sampler.pipelined and choice.num_patches):
+            return self.sampler
+        return dataclasses.replace(
+            self.sampler, pipeline=dataclasses.replace(
+                self.sampler.pipeline, num_patches=choice.num_patches))
+
+    def _step_fn(self, batch: int, seq: int, choice: PlanChoice) -> Callable:
+        sc = self._bucket_sampler(choice)
+
+        def build():
+            dt = 1.0 / sc.num_steps
+            if sc.pipelined:
                 def warm(params, x, cond, t, state):
                     return hybrid_sample_step(params, self.cfg, self.ctx, x,
-                                              cond, t, dt, self.sampler,
-                                              state, warm=True)
+                                              cond, t, dt, sc, state,
+                                              warm=True)
 
                 def displaced(params, x, cond, t, state):
                     return hybrid_sample_step(params, self.cfg, self.ctx, x,
-                                              cond, t, dt, self.sampler,
-                                              state, warm=False)
+                                              cond, t, dt, sc, state,
+                                              warm=False)
 
                 # donate the threaded KV state (arg 4): the caller discards
                 # the old state each step, so XLA may update it in place
                 # instead of allocating a second full-size KV buffer
-                self._step_cache[key] = (jax.jit(warm, donate_argnums=(4,)),
-                                         jax.jit(displaced,
-                                                 donate_argnums=(4,)))
-            else:
-                def f(params, x, cond, t):
-                    return sample_step(params, self.cfg, self.ctx, x, cond, t,
-                                       dt, self.sampler)
+                return (jax.jit(warm, donate_argnums=(4,)),
+                        jax.jit(displaced, donate_argnums=(4,)))
 
-                self._step_cache[key] = jax.jit(f)
-        return self._step_cache[key]
+            def f(params, x, cond, t):
+                return sample_step(params, self.cfg, self.ctx, x, cond, t,
+                                   dt, sc)
 
-    def _next_batch(self) -> list[DiTRequest]:
-        """Greedy same-length batching (SP requires uniform seq per batch)."""
-        if not self.queue:
-            return []
-        head = self.queue[0]
-        batch, rest = [], deque()
-        while self.queue and len(batch) < self.max_batch:
-            r = self.queue.popleft()
-            (batch if r.seq_len == head.seq_len else rest).append(r)
-        while rest:
-            self.queue.appendleft(rest.pop())
-        return batch
+            return jax.jit(f)
+
+        return self.plan_cache.step_fn(batch, seq, build)
 
     def _dp_degree(self) -> int:
-        import math
         ba = self.ctx.sp.batch_axes or ()
         return math.prod(self.ctx.mesh.shape[a] for a in ba)
 
-    def run_once(self) -> list[DiTResult]:
-        batch = self._next_batch()
-        if not batch:
+    def run_once(self, flush: bool = True) -> list[DiTResult]:
+        """Serve one scheduler admission.  ``flush=False`` lets the
+        admission policy defer partial (padded) batches in the hope of
+        more arrivals; the default serves whatever scores best now."""
+        adm = self.scheduler.next_batch(time.time(), flush=flush)
+        if adm is None:
             return []
-        # pad the batch up to a multiple of the data-parallel degree (SPMD
-        # batch sharding requires divisibility); padded rows are dropped.
-        dp = self._dp_degree()
+        batch = adm.requests
         n_real = len(batch)
-        b = -(-n_real // dp) * dp
-        t = batch[0].seq_len
+        b = adm.batch_rows  # n_real + dp padding rows (dropped at the end)
+        t = adm.seq_len
         d = self.cfg.d_model
+        sc = self._bucket_sampler(adm.plan)
         cond = jnp.stack([
             (batch[i].cond if i < n_real and batch[i].cond is not None
              else jnp.zeros((COND_TOKENS, d), self.cfg.dtype))
@@ -161,21 +217,36 @@ class DiTServer:
         ])
         self._rng, sub = jax.random.split(self._rng)
         x = jax.random.normal(sub, (b, t, 64), self.cfg.dtype)
-        fn = self._step_fn(b, t)
-        dt = 1.0 / self.sampler.num_steps
+        fn = self._step_fn(b, t, adm.plan)
+        dt = 1.0 / sc.num_steps
         drift_vals = []
-        if self.sampler.pipelined:
+        resyncs = 0
+        if sc.pipelined:
             warm_fn, displaced_fn = fn
-            state = hybrid_state_shape(self.cfg, b, t, self.sampler)
-            for i in range(self.sampler.num_steps):
-                f = (warm_fn if self.sampler.pipeline.warm_step(i)
-                     else displaced_fn)
+            pipe = sc.pipeline
+            thresholds = [r.drift_threshold for r in batch]
+            use_drift = self.drift.engaged(thresholds)
+            state = hybrid_state_shape(self.cfg, b, t, sc)
+            last_drift: list[float] | None = None
+            for i in range(sc.num_steps):
+                if use_drift:
+                    warm = self.drift.warm(pipe, i, last_drift, thresholds)
+                    if warm and i >= pipe.warmup_steps:
+                        resyncs += 1
+                else:
+                    warm = pipe.warm_step(i)
+                f = warm_fn if warm else displaced_fn
                 x, state, m = f(self.params, x, cond,
                                 jnp.float32(1.0 - i * dt), state)
-                # device [B] vector: no host sync inside the timed loop
-                drift_vals.append(m["kv_drift_per_request"])
+                per = m["kv_drift_per_request"]
+                drift_vals.append(per)
+                if use_drift:
+                    # threshold-triggered resync needs the drift on the
+                    # host: one device sync per step, only when a bound is
+                    # actually configured (DESIGN.md §9)
+                    last_drift = [float(per[j]) for j in range(n_real)]
         else:
-            for i in range(self.sampler.num_steps):
+            for i in range(sc.num_steps):
                 x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
         x.block_until_ready()
         now = time.time()
@@ -183,15 +254,18 @@ class DiTServer:
         # trajectory (padded rows are never handed to a request)
         drifts = [[float(v[i]) for v in drift_vals] for i in range(n_real)]
         return [
-            DiTResult(r.rid, x[i], now - r.submitted, self.sampler.num_steps,
-                      kv_drift=drifts[i] if drift_vals else [])
+            DiTResult(r.rid, x[i], now - r.submitted, sc.num_steps,
+                      kv_drift=drifts[i] if drift_vals else [],
+                      resyncs=resyncs,
+                      sla_met=(r.sla is None
+                               or now <= r.submitted + r.sla))
             for i, r in enumerate(batch)
         ]
 
     def serve(self) -> list[DiTResult]:
         out = []
-        while self.queue:
-            out.extend(self.run_once())
+        while self.scheduler.pending:
+            out.extend(self.run_once(flush=True))
         return out
 
 
@@ -204,6 +278,8 @@ class ARRequest:
     rid: int
     prompt: jax.Array  # [L_prompt] int32
     max_new_tokens: int = 16
+    priority: float = 0.0  # higher admits sooner; aging bounds starvation
+    submitted: int = 0  # engine tick at submission (stamped by submit())
 
 
 @dataclasses.dataclass
@@ -219,20 +295,31 @@ class ARServer:
     Prefill is implemented as teacher-forced decode of the prompt (one
     engine, one cache layout — adequate for the assigned decode shapes;
     a chunked-prefill path is a straightforward extension).
+
+    Freed slots are filled by effective priority ``priority + age *
+    aging_rate`` (serving/sched ``aged_priority``) rather than raw FIFO:
+    a high-priority stream can jump the queue, but every waiting request's
+    effective priority grows with its queue age, so a request of base
+    priority p is admitted within ``(p_max - p) / aging_rate`` ticks of
+    any fresher competitor — the same starvation bound the DiT scheduler
+    enforces on buckets.  Ties (equal effective priority, e.g. all base 0)
+    reduce to FIFO.
     """
 
     def __init__(self, params, cfg: ModelConfig, mesh, sp: SPConfig,
                  batch_slots: int = 4, max_len: int = 256,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, aging_rate: float = 0.1):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "decode")
         self.bundle = get_model(cfg)
         self.slots = [Slot() for _ in range(batch_slots)]
         self.max_len = max_len
+        self.aging_rate = aging_rate
         self.caches = self.bundle.init_caches(cfg, batch_slots, max_len, cache_dtype)
         self.queue: deque[ARRequest] = deque()
         self.results: dict[int, list[int]] = {}
+        self._ticks = 0
 
         def step(params, caches, tokens, cur_index):
             batch = {"tokens": tokens}
@@ -243,12 +330,23 @@ class ARServer:
         self._step = jax.jit(step)
 
     def submit(self, req: ARRequest) -> None:
+        req.submitted = self._ticks
         self.queue.append(req)
+
+    def _take_next(self) -> ARRequest:
+        """Pop the waiting request with the highest aged priority (stable:
+        FIFO among equals — max() keeps the first of tied keys)."""
+        best = max(self.queue,
+                   key=lambda r: aged_priority(r.priority,
+                                               self._ticks - r.submitted,
+                                               self.aging_rate))
+        self.queue.remove(best)
+        return best
 
     def _admit(self) -> None:
         for s in self.slots:
             if s.req is None and self.queue:
-                s.req = self.queue.popleft()
+                s.req = self._take_next()
                 s.pos = 0
                 s.generated = []
 
@@ -259,6 +357,7 @@ class ARServer:
         requests are aligned at admission (pos 0).  Slots therefore run in
         lockstep — the standard static-batching baseline."""
         self._admit()
+        self._ticks += 1
         active = [s for s in self.slots if s.req is not None]
         if not active:
             return

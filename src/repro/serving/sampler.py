@@ -224,15 +224,23 @@ def hybrid_sample_step(params, cfg: ModelConfig, ctx: ParallelContext,
 def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
            key: jax.Array, batch: int, seq_len: int, cond: jax.Array,
            sc: SamplerConfig = SamplerConfig(),
-           step_fn=None, metrics: list[dict] | None = None) -> jax.Array:
+           step_fn=None, metrics: list[dict] | None = None,
+           drift_policy=None,
+           drift_thresholds: list[float | None] | None = None) -> jax.Array:
     """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS].
 
     With ``sc.pipeline`` set, the loop threads the displaced-pipeline KV
     state: the first ``warmup_steps`` steps run synchronously, then
     displaced (PipeFusion) with a periodic synchronous re-sync every
-    ``resync_every`` steps.  Passing a ``metrics`` list collects one
-    per-step dict (``step``, ``warm``, ``kv_drift``) — the surfaced
-    staleness trajectory.  A custom ``step_fn`` bypasses all of that.
+    ``resync_every`` steps.  Passing a ``drift_policy`` (sched.DriftPolicy)
+    replaces that static period with threshold-triggered resync: a step
+    runs warm exactly when the previous step's per-request ``kv_drift``
+    crossed the request's bound (``drift_thresholds``, one entry per batch
+    row, None entries fall back to the policy default) — reading the drift
+    on the host costs one device sync per step.  Passing a ``metrics``
+    list collects one per-step dict (``step``, ``warm``, ``kv_drift``) —
+    the surfaced staleness trajectory.  A custom ``step_fn`` bypasses all
+    of that.
     """
     x = jax.random.normal(key, (batch, seq_len, LATENT_CHANNELS), cfg.dtype)
     dt = 1.0 / sc.num_steps
@@ -244,12 +252,21 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
         for i in range(sc.num_steps):
             x = sample_step(params, cfg, ctx, x, cond, 1.0 - i * dt, dt, sc)
         return x
+    thresholds = drift_thresholds or [None] * batch
+    use_drift = drift_policy is not None and drift_policy.engaged(thresholds)
+    last_drift: list[float] | None = None
     state = hybrid_state_shape(cfg, batch, seq_len, sc)
     for i in range(sc.num_steps):
-        warm = sc.pipeline.warm_step(i)
+        if use_drift:
+            warm = drift_policy.warm(sc.pipeline, i, last_drift, thresholds)
+        else:
+            warm = sc.pipeline.warm_step(i)
         x, state, m = hybrid_sample_step(params, cfg, ctx, x, cond,
                                          1.0 - i * dt, dt, sc, state,
                                          warm=warm)
+        if use_drift:
+            per = m["kv_drift_per_request"]
+            last_drift = [float(per[j]) for j in range(batch)]
         if metrics is not None:
             metrics.append({
                 "step": i, "warm": warm,

@@ -1,0 +1,38 @@
+"""SLA-aware request scheduling for DiT serving (DESIGN.md §9).
+
+Resolution-bucketed continuous batching: a bucketer groups requests by
+latent length, an admission policy scores (bucket, batch-size) candidates
+with the analytical comm model against per-request SLAs, a plan cache
+selects and memoizes one ``plan_hybrid`` execution plan (and compiled
+step) per bucket shape, and a drift policy turns the displaced pipeline's
+``kv_drift`` signal into threshold-triggered resyncs.
+"""
+from .admission import AdmissionPolicy, Candidate, SchedConfig
+from .bucketer import (
+    Bucket,
+    Bucketer,
+    BucketStats,
+    aged_priority,
+    deadline_of,
+    padded_rows,
+)
+from .drift import DriftPolicy
+from .plan_cache import PlanCache, PlanChoice
+from .scheduler import Admission, RequestScheduler
+
+__all__ = [
+    "Admission",
+    "AdmissionPolicy",
+    "Bucket",
+    "Bucketer",
+    "BucketStats",
+    "Candidate",
+    "DriftPolicy",
+    "PlanCache",
+    "PlanChoice",
+    "RequestScheduler",
+    "SchedConfig",
+    "aged_priority",
+    "deadline_of",
+    "padded_rows",
+]

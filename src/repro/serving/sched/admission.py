@@ -1,0 +1,100 @@
+"""SLA-aware cross-bucket admission (DESIGN.md §9).
+
+Each scheduling round scores candidate (bucket, batch-size) pairs and
+admits the best one — across buckets, not head-of-line.  The score is in
+seconds, combining:
+
+  * **deadline slack** — min over the candidate's requests of
+    ``deadline - now - predicted_batch_latency``, with the batch latency
+    taken from the comm model via the plan cache.  Tight slack ⇒ urgent.
+  * **padding cost** — the device time the dp-divisibility pad would
+    waste, ``pad_rows / batch_rows * batch_latency``.
+  * **aging credit** — ``oldest_age * aging_rate`` subtracted from the
+    score, so waiting buckets monotonically gain urgency.
+
+Two hard rules sit above the scoring:
+
+  * **starvation bound** — a bucket whose oldest request has waited
+    ``starvation_age`` or longer MUST be served next (most overdue first);
+    scoring only breaks ties among non-overdue buckets.
+  * **deferral** — a candidate that needs padding rows may wait for more
+    arrivals while its slack exceeds ``defer_slack`` (unless ``flush`` is
+    set, i.e. no more arrivals are coming); this is what converts greedy
+    fragment batches into dp-aligned ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .bucketer import Bucket, aged_priority, padded_rows
+from .plan_cache import PlanCache, PlanChoice
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedConfig:
+    max_batch: int = 4
+    dp: int = 1  # data-parallel degree the batch must divide into
+    starvation_age: float = 30.0  # s: hard admission bound
+    aging_rate: float = 1.0  # s of score credit per s of queue age
+    default_slack: float = 60.0  # assumed slack for requests without SLA
+    defer_slack: float = 1.0  # padded candidates wait while slack > this
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    bucket: Bucket
+    k: int  # real requests admitted
+    batch_rows: int  # k + dp padding rows
+    pad_rows: int
+    plan: PlanChoice
+    min_slack: float
+    age: float
+    score: float
+
+
+class AdmissionPolicy:
+    def __init__(self, cfg: SchedConfig, plan_cache: PlanCache):
+        self.cfg = cfg
+        self.plans = plan_cache
+
+    def _candidate(self, b: Bucket, k: int, now: float) -> Candidate:
+        c = self.cfg
+        pad = padded_rows(k, c.dp)
+        rows = k + pad
+        plan = self.plans.select(rows, b.seq_len)
+        slack = b.min_slack(now, plan.t_batch, k, c.default_slack)
+        age = b.oldest_age(now)
+        pad_cost = pad / rows * plan.t_batch
+        score = slack + pad_cost - aged_priority(0.0, age, c.aging_rate)
+        return Candidate(b, k, rows, pad, plan, slack, age, score)
+
+    def candidates(self, buckets: list[Bucket], now: float) -> list[Candidate]:
+        c = self.cfg
+        out = []
+        for b in buckets:
+            ks = {min(len(b), c.max_batch)}
+            aligned = (min(len(b), c.max_batch) // c.dp) * c.dp
+            if aligned > 0:
+                ks.add(aligned)  # pad-free alternative when enough queued
+            for k in sorted(ks):
+                out.append(self._candidate(b, k, now))
+        return out
+
+    def pick(self, buckets: list[Bucket], now: float,
+             flush: bool = False) -> Candidate | None:
+        cands = self.candidates(buckets, now)
+        if not cands:
+            return None
+        c = self.cfg
+        overdue = [x for x in cands if x.age >= c.starvation_age]
+        if overdue:
+            # starvation bound: most overdue first; bigger batch breaks ties
+            return max(overdue, key=lambda x: (x.age, x.k))
+        if not flush:
+            eligible = [x for x in cands
+                        if x.pad_rows == 0 or x.min_slack <= c.defer_slack]
+            if not eligible:
+                return None  # every option would pad and none is urgent
+            cands = eligible
+        # lowest score = most urgent; ties to the older, then longer bucket
+        return min(cands, key=lambda x: (x.score, -x.age, -x.bucket.seq_len))

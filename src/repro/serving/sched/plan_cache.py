@@ -1,0 +1,124 @@
+"""Per-bucket-shape plan selection and compiled-step memoization
+(DESIGN.md §9).
+
+Two caches, both keyed by the bucket shape (padded batch rows, latent
+length):
+
+  * **plan cache** — ``plan_hybrid`` candidates scored with the analytical
+    comm model (``core.comm_model.plan_step_latency``) for THAT shape's
+    workload; the TAS/Torus placement inside each candidate's SP sub-mesh
+    is the planner's own (§4.2 rules are untouched).  For pipelined plans
+    the patch count is co-selected: more patches shrink the fill bubble
+    but must divide the latent length.
+  * **step cache** — whatever the engine compiles for a shape (a jitted
+    step function or a warm/displaced pair) is memoized with hit/miss
+    counters, so bucket switches never re-trace: one trace per bucket
+    shape, observable via ``traces``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from ...core.comm_model import LayerWorkload, NetworkModel, plan_step_latency
+from ...core.planner import HybridPlan, candidate_hybrid_plans
+
+
+class PlanChoice(NamedTuple):
+    """The selected execution plan for one bucket shape."""
+
+    hplan: HybridPlan
+    num_patches: int  # 0 = not pipelined
+    pred: dict  # comm-model breakdown for the chosen (plan, patches)
+    t_step: float  # predicted seconds per sampler step
+    t_batch: float  # t_step * num_steps — the admission policy's latency
+
+
+class PlanCache:
+    def __init__(self, *, n_machines: int = 1, m_per_machine: int = 1,
+                 heads: int, head_dim: int, n_layers: int,
+                 kv_heads: int | None = None, num_steps: int = 20,
+                 guided: bool = True, guidance_branches: int = 2,
+                 dp: int = 1, net: NetworkModel | None = None,
+                 candidates: list[HybridPlan] | None = None,
+                 base_patches: int = 0,
+                 patch_multipliers: tuple[int, ...] = (1, 2, 4)):
+        """``candidates`` fixes the plan set (the engine passes the single
+        plan its mesh can execute; the benchmark passes None to enumerate
+        every feasible (cfg, pp) split).  ``base_patches`` > 0 enables
+        patch-count co-selection even for pp = 1 plans (single-stage
+        displaced pipelining)."""
+        self.net = net or NetworkModel()
+        self.heads = heads
+        self.head_dim = head_dim
+        self.kv_heads = kv_heads
+        self.n_layers = n_layers
+        self.num_steps = num_steps
+        self.guided = guided
+        self.guidance_branches = guidance_branches
+        self.dp = max(dp, 1)
+        self.base_patches = base_patches
+        self.patch_multipliers = patch_multipliers
+        if candidates is None:
+            candidates = candidate_hybrid_plans(
+                n_machines, m_per_machine, heads, kv_heads, n_layers=n_layers,
+                cfg_degree=max(guidance_branches, 2))
+        self.candidates = list(candidates)
+        assert self.candidates, "plan cache needs at least one candidate"
+        self.plans: dict[tuple[int, int], PlanChoice] = {}
+        self._steps: dict[tuple[int, int], Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- plan selection ---------------------------------------------------
+    def _patch_options(self, hplan: HybridPlan, seq: int) -> list[int]:
+        base = hplan.pp if hplan.pp > 1 else self.base_patches
+        if base <= 0:
+            return [0]
+        opts = sorted({base * m for m in self.patch_multipliers
+                       if base * m <= seq and seq % (base * m) == 0})
+        return opts or [base]
+
+    def select(self, batch_rows: int, seq: int) -> PlanChoice:
+        """Best (plan, patch count) for a bucket shape, memoized.
+
+        ``batch_rows`` is the padded global batch; the scored workload is
+        the per-replica slice (batch_rows / dp) each plan actually runs.
+        """
+        key = (batch_rows, seq)
+        cached = self.plans.get(key)
+        if cached is not None:
+            return cached
+        wl = LayerWorkload(batch=max(batch_rows // self.dp, 1), seq=seq,
+                           heads=self.heads, head_dim=self.head_dim)
+        best: PlanChoice | None = None
+        for h in self.candidates:
+            for np_ in self._patch_options(h, seq):
+                pred = plan_step_latency(
+                    h, wl, self.net, n_layers=self.n_layers,
+                    guided=self.guided,
+                    guidance_branches=self.guidance_branches,
+                    num_patches=np_ or None, num_steps=self.num_steps)
+                t = pred["t_step"]
+                if best is None or t < best.t_step:
+                    best = PlanChoice(h, np_, pred, t, t * self.num_steps)
+        assert best is not None
+        self.plans[key] = best
+        return best
+
+    # -- compiled-step memoization ---------------------------------------
+    def step_fn(self, batch_rows: int, seq: int, build: Callable[[], Any]):
+        """Return the compiled step artifact for a shape, building (and
+        counting a trace) only on first use."""
+        key = (batch_rows, seq)
+        if key in self._steps:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._steps[key] = build()
+        return self._steps[key]
+
+    @property
+    def traces(self) -> int:
+        """Distinct compilations so far — the 'one trace per bucket shape'
+        acceptance metric."""
+        return self.misses

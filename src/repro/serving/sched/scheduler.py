@@ -1,0 +1,64 @@
+"""Request scheduler facade (DESIGN.md §9): bucketer → admission → plan
+cache, behind the two calls an engine needs (``submit`` / ``next_batch``).
+
+The scheduler is pure host-side bookkeeping — no jax, no device state —
+so the same object drives the real ``DiTServer`` and the analytical
+discrete-event simulation in ``benchmarks/sched_sweep.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .admission import AdmissionPolicy, SchedConfig
+from .bucketer import Bucketer, BucketStats
+from .plan_cache import PlanCache, PlanChoice
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One scheduling decision: which requests run next and under what
+    plan."""
+
+    seq_len: int
+    requests: list
+    batch_rows: int  # len(requests) + dp padding rows
+    pad_rows: int
+    plan: PlanChoice
+    min_slack: float
+    age: float  # oldest queue age at admission
+
+
+class RequestScheduler:
+    def __init__(self, plan_cache: PlanCache,
+                 cfg: SchedConfig = SchedConfig()):
+        self.cfg = cfg
+        self.plan_cache = plan_cache
+        self.bucketer = Bucketer()
+        self.policy = AdmissionPolicy(cfg, plan_cache)
+        self.admissions: int = 0
+
+    def submit(self, req, now: float) -> None:
+        """Enqueue a request, stamping its submission time (the basis for
+        SLA deadlines and starvation ages)."""
+        req.submitted = now
+        self.bucketer.add(req)
+
+    @property
+    def pending(self) -> int:
+        return self.bucketer.pending
+
+    def next_batch(self, now: float, flush: bool = False) -> Admission | None:
+        """Pick and dequeue the next batch; None = nothing admissible
+        (queue empty, or every candidate is worth deferring and ``flush``
+        is False)."""
+        cand = self.policy.pick(self.bucketer.nonempty(), now, flush=flush)
+        if cand is None:
+            return None
+        reqs = cand.bucket.pop(cand.k, now, self.cfg.dp)
+        self.admissions += 1
+        return Admission(cand.bucket.seq_len, reqs, cand.batch_rows,
+                         cand.pad_rows, cand.plan, cand.min_slack, cand.age)
+
+    def totals(self) -> BucketStats:
+        """Aggregated padding-waste / starvation-age accounting."""
+        return self.bucketer.totals()

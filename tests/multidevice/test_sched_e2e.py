@@ -1,0 +1,94 @@
+"""Mixed-resolution DiT serving end-to-end through the request scheduler
+(DESIGN.md §9) on the 8-fake-device hybrid mesh: 256/512/1024-latent
+requests with SLAs and drift thresholds, per-bucket plan selection, one
+jit trace per bucket shape."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import PipelineConfig, SPConfig
+from repro.launch.mesh import make_hybrid_mesh
+from repro.serving import (
+    DiTRequest,
+    DiTServer,
+    DriftPolicy,
+    SamplerConfig,
+    SchedConfig,
+)
+
+LENS = [256, 512, 1024, 256, 512, 256, 256]  # 4x256 + 2x512 + 1x1024
+SLAS = {256: 30.0, 512: 60.0, 1024: 120.0}
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = dataclasses.replace(get_reduced("flux-12b"), dtype="float32")
+    from repro.models import get_model
+
+    bundle = get_model(cfg)
+    params, axes = bundle.init(cfg, jax.random.PRNGKey(0), 1)
+    mesh = make_hybrid_mesh(cfg=1, pipe=2, data=2, model=2)
+    sp = SPConfig(strategy="swift_torus", sp_axes=("model",),
+                  batch_axes=("data",), pp_axis="pipe")
+    srv = DiTServer(params, cfg, mesh, sp,
+                    sampler=SamplerConfig(
+                        num_steps=3,
+                        pipeline=PipelineConfig(pp=2, warmup_steps=1)),
+                    max_batch=2, param_axes=axes,
+                    sched=SchedConfig(max_batch=2, starvation_age=30.0),
+                    drift=DriftPolicy(threshold=0.05))
+    for i, n in enumerate(LENS):
+        srv.submit(DiTRequest(rid=i, seq_len=n, sla=SLAS[n],
+                              drift_threshold=0.05 if i % 2 else None))
+    return srv, srv.serve()
+
+
+def test_all_requests_served_with_correct_shapes(server):
+    srv, results = server
+    assert sorted(r.rid for r in results) == list(range(len(LENS)))
+    for r in results:
+        assert r.latents.shape == (LENS[r.rid], 64)
+        assert bool(jnp.all(jnp.isfinite(r.latents)))
+        assert r.sampling_steps == 3
+        assert len(r.kv_drift) == 3
+        assert r.kv_drift[0] == 0.0  # warmup step is synchronous
+
+
+def test_one_trace_per_bucket_shape(server):
+    srv, _ = server
+    # dp=2 pads every batch to 2 rows: bucket shapes are (2, seq)
+    shapes = set(srv.plan_cache.plans)
+    assert {s for _, s in shapes} == {256, 512, 1024}
+    assert srv.plan_cache.traces == len(shapes)
+    # 4x256 and 2x512 revisit their bucket shapes => step-cache hits
+    assert srv.plan_cache.hits == srv.scheduler.admissions - len(shapes)
+    assert srv.plan_cache.hits >= 1
+
+
+def test_per_bucket_plans_selected_and_uniform_batches(server):
+    srv, _ = server
+    tot = srv.scheduler.totals()
+    assert tot.admitted == len(LENS)
+    # batches never mix buckets: padded work is only dp-divisibility rows
+    # (the odd 1024-bucket count with max_batch=2, dp=2; 4x256 and 2x512
+    # pack exactly)
+    assert tot.padded_token_work == 1024
+    for (rows, seq), choice in srv.plan_cache.plans.items():
+        choice.hplan.validate()
+        assert choice.hplan.pp == 2  # the engine's fixed pipeline depth
+        # per-bucket patch count must divide the bucket's latent length
+        assert choice.num_patches % 2 == 0 and seq % choice.num_patches == 0
+    assert tot.max_wait <= 30.0 + 60.0  # starvation bound + service time
+
+
+def test_drift_policy_metrics_surfaced(server):
+    srv, results = server
+    # every displaced step reports per-request drift; threshold-triggered
+    # resyncs are counted on the result
+    for r in results:
+        assert all(d >= 0.0 for d in r.kv_drift)
+        assert 0 <= r.resyncs <= 2
+        assert r.sla_met
