@@ -8,15 +8,20 @@ NVSHMEM-style put/signal/wait semantics over XLA collectives:
   stream  — staged transfer programs composed from channels: ring shifts,
             distance-k torus hops, the decomposed all-to-all, and the
             displaced pipeline's pipe-axis stage hand-off.
+  pallas_backend — the ``backend="pallas"`` lowering (DESIGN.md §8.1):
+            in-kernel DMA issue + explicit semaphores instead of ppermute
+            + barrier; interpret mode makes it runnable on CPU CI.
   trace   — records the intended overlap schedule at trace time and
             validates it against compiled HLO (collective-permute
-            placement + dependency-level overlap admission).
+            placement + dependency-level overlap admission) and, for the
+            Pallas path, validates the semaphore schedule's pairing.
 
 core/{ring,torus,collectives}.py and models/dit.py route all their
 transfers through this package; this package imports nothing from core,
 so the dependency points one way.
 """
 from .channel import Channel, InFlight, fence, pin, ring_perm_of, shift_perm
+from .pallas_backend import BACKENDS
 from .stream import (
     Stream,
     pipe_handoff,
@@ -25,16 +30,30 @@ from .stream import (
     staged_ungroup,
     torus_hop,
 )
-from .trace import ScheduleTrace, TransferEvent, ValidationReport, record, validate
+from .trace import (
+    ScheduleTrace,
+    SemEvent,
+    SemReport,
+    TransferEvent,
+    ValidationReport,
+    mark_compute,
+    record,
+    validate,
+    validate_semaphores,
+)
 
 __all__ = [
+    "BACKENDS",
     "Channel",
     "InFlight",
     "ScheduleTrace",
+    "SemEvent",
+    "SemReport",
     "Stream",
     "TransferEvent",
     "ValidationReport",
     "fence",
+    "mark_compute",
     "pin",
     "pipe_handoff",
     "record",
@@ -45,4 +64,5 @@ __all__ = [
     "staged_ungroup",
     "torus_hop",
     "validate",
+    "validate_semaphores",
 ]

@@ -59,7 +59,11 @@ class Channel:
     ``perm`` over the named mesh ``axes``.
 
     Channels are cheap value objects — construct them per schedule stage;
-    the name only matters for trace/debug output.
+    the name only matters for trace/debug output.  ``backend`` selects the
+    lowering: ``"xla"`` (ppermute + optimization_barrier, overlap left to
+    XLA's scheduler) or ``"pallas"`` (in-kernel DMA + explicit semaphores,
+    DESIGN.md §8.1); ``interpret`` runs the Pallas branch in interpreter
+    mode (the CPU CI path).
     """
 
     axes: tuple[str, ...]
@@ -67,6 +71,11 @@ class Channel:
     name: str = "chan"
     stream: str = ""  # owning Stream name (trace bookkeeping)
     stage: int = 0  # stage index within the stream program
+    backend: str = "xla"  # "xla" | "pallas"
+    interpret: bool = True  # Pallas branch: interpreter mode (CPU CI)
+
+    def __post_init__(self):
+        assert self.backend in ("xla", "pallas"), self.backend
 
     def put(self, *tensors: jax.Array, overlaps: str = "") -> "InFlight":
         """Issue the one-sided transfer of ``tensors`` (start the DMA).
@@ -78,14 +87,67 @@ class Channel:
         SPMD every rank is simultaneously the sender and the receiver of
         its neighbour's put.
         """
+        if self.backend == "pallas":
+            return self._put_pallas(tensors, overlaps)
         perm = list(self.perm)
         out = tuple(lax.ppermute(t, self.axes, perm=perm) for t in tensors)
         _trace.emit(_trace.TransferEvent(
             stream=self.stream, channel=self.name, stage=self.stage,
             axes=tuple(self.axes), perm=tuple(self.perm),
             shape=tuple(tensors[0].shape), n_tensors=len(tensors),
-            overlaps=overlaps))
+            overlaps=overlaps, backend="xla"))
         return InFlight(channel=self, payload=out)
+
+    def _put_pallas(self, tensors: tuple[jax.Array, ...],
+                    overlaps: str) -> "InFlight":
+        """Pallas lowering: semaphore-tracked delivery (DESIGN.md §8.1)."""
+        from . import pallas_backend as _pb
+
+        sem = _pb.new_sem(self.name, self.stage)
+        _trace.emit(_trace.TransferEvent(
+            stream=self.stream, channel=self.name, stage=self.stage,
+            axes=tuple(self.axes), perm=tuple(self.perm),
+            shape=tuple(tensors[0].shape), n_tensors=len(tensors),
+            overlaps=overlaps, backend="pallas"))
+        _trace.emit_sem(_trace.SemEvent(
+            kind="put", sem=sem, stream=self.stream, channel=self.name,
+            stage=self.stage))
+        out = _pb.deliver(tensors, tuple(self.axes), tuple(self.perm),
+                          interpret=self.interpret)
+        _trace.emit_sem(_trace.SemEvent(
+            kind="signal", sem=sem, stream=self.stream, channel=self.name,
+            stage=self.stage))
+        return InFlight(channel=self, payload=out, sem=sem)
+
+    def put_fused(self, *tensors: jax.Array, overlaps: str = "") -> "InFlight":
+        """Deliver a put that was ISSUED inside a fused kernel
+        (kernels/ring_flash.py): the kernel already started the copy at
+        its first grid step and waited it only after its last compute
+        block; ``tensors`` are the forwarded buffers it produced.  This
+        records the schedule (put flagged ``overlap=True`` — the
+        semaphore validator then requires compute between issue and
+        wait) and performs the wire move: the kernel's DMA stages the
+        chunk into the forward buffer on the *local* device, so the
+        inter-device hop is a ppermute on every branch (DESIGN.md §8.1
+        interpret caveats; true in-kernel remote-copy forwarding is the
+        ROADMAP hardware item).
+        """
+        assert self.backend == "pallas", "put_fused is a Pallas-path verb"
+        from . import pallas_backend as _pb
+
+        sem = _pb.fused_transfer_events(
+            self, tuple(tensors[0].shape), len(tensors), overlaps=overlaps)
+        # The fused kernel's DMA is a LOCAL make_async_copy into the
+        # forward buffer (the RDMA staging step) on every branch, so the
+        # wire move is always this ppermute — including on real TPUs.
+        # Replacing it with true in-kernel make_async_remote_copy
+        # forwarding is the ROADMAP hardware item.
+        out = tuple(lax.ppermute(t, self.axes, perm=list(self.perm))
+                    for t in tensors)
+        _trace.emit_sem(_trace.SemEvent(
+            kind="signal", sem=sem, stream=self.stream, channel=self.name,
+            stage=self.stage))
+        return InFlight(channel=self, payload=out, sem=sem)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +156,7 @@ class InFlight:
 
     channel: Channel
     payload: tuple[jax.Array, ...]
+    sem: str = ""  # semaphore id (Pallas backend only)
 
     def wait(self, *deps: jax.Array) -> Any:
         """Signal-wait: deliver the buffer, ordered after ``deps``.
@@ -105,6 +168,10 @@ class InFlight:
         Returns the payload (unpacked when it is a single tensor); with
         deps, returns ``(payload..., deps...)`` all fenced.
         """
+        if self.sem:
+            _trace.emit_sem(_trace.SemEvent(
+                kind="wait", sem=self.sem, stream=self.channel.stream,
+                channel=self.channel.name, stage=self.channel.stage))
         if not deps:
             return self.payload[0] if len(self.payload) == 1 else self.payload
         vals, deps_out = fence(self.payload, deps)

@@ -1,0 +1,207 @@
+"""Pallas lowering of the one-sided channel verbs (DESIGN.md §8.1).
+
+The XLA backend (channel.py) leaves the put's overlap to the latency-hiding
+scheduler; this backend issues the transfer *itself*, the way the paper's
+NVSHMEM kernels do, with explicit semaphores:
+
+    put     -> ``pltpu.make_async_remote_copy(...).start()``: the RDMA is
+               started from inside a Pallas kernel, on the DMA engines,
+               while the kernel's compute continues.
+    signal  -> the copy's recv semaphore (``pltpu.SemaphoreType.DMA``):
+               signalled by hardware when the payload has landed — the
+               NVSHMEM signal flag, with no flag tensor materialised.
+    wait    -> ``dma.wait()`` (``pltpu.semaphore_wait`` on the recv
+               semaphore): the receiver-side spin-wait, executed as late
+               as the schedule allows.
+
+Two lowering branches, selected by ``interpret`` / the runtime platform:
+
+  * **TPU** (``interpret=False`` on a TPU backend): a kernel performs the
+    remote copy proper.  The destination rank comes from the channel's
+    perm table indexed by ``lax.axis_index`` — a *distance*, exactly like
+    the XLA route.  Only single-axis channels lower this way (the RDMA
+    ``device_id`` is a coordinate along one mesh axis); multi-axis routes
+    fall back to the emulation branch.
+  * **interpret / CPU CI** (the tested path): inter-device wire movement
+    is not expressible inside an interpret-mode kernel, so the wire move
+    stays a ``lax.ppermute`` (same HLO pairs, so `trace.validate` keeps
+    working unchanged) and a *landing kernel* executes the put/signal/wait
+    protocol on the received buffer: an in-kernel async copy
+    (``pltpu.make_async_copy`` + DMA semaphore) delivers the payload into
+    the receive buffer.  Everything downstream of the channel — the fused
+    ring kernel, the semaphore schedule, trace validation — runs for real.
+
+Every protocol step is recorded as a ``trace.SemEvent`` so commcheck can
+validate the schedule's well-formedness (pairing, no wait-before-put, no
+blocking wait) next to the HLO-level overlap checks.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import trace as _trace
+
+__all__ = ["BACKENDS", "deliver", "fused_transfer_events", "new_sem",
+           "landing_copy"]
+
+BACKENDS = ("xla", "pallas")
+
+_sem_counter = itertools.count()
+
+
+def new_sem(channel_name: str, stage: int) -> str:
+    """Mint a unique semaphore id for one put (trace bookkeeping only —
+    the runtime semaphore is a kernel scratch, not addressed by name)."""
+    return f"{channel_name}.s{stage}#{next(_sem_counter)}"
+
+
+def _landing_kernel(*refs):
+    """Deliver ``n`` received buffers through in-kernel async copies.
+
+    refs = (in_0..in_{n-1}, out_0..out_{n-1}, sem_0..sem_{n-1}).  All
+    copies are started before any is waited — the multi-tensor put (K and
+    V ride one route) stays a single protocol step.
+    """
+    n = len(refs) // 3
+    ins, outs, sems = refs[:n], refs[n:2 * n], refs[2 * n:]
+    dmas = [pltpu.make_async_copy(i, o, s)
+            for i, o, s in zip(ins, outs, sems)]
+    for dma in dmas:
+        dma.start()
+    for dma in dmas:
+        dma.wait()
+
+
+def landing_copy(tensors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
+    """Run the landing kernel over ``tensors`` (interpret mode).
+
+    One ``pallas_call`` delivers all tensors of a put: the buffers stay in
+    ANY/HBM space (no VMEM staging of arbitrarily-shaped payloads) and one
+    DMA semaphore per tensor tracks completion.
+    """
+    tensors = tuple(tensors)
+    n = len(tensors)
+    out = pl.pallas_call(
+        _landing_kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n,
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n,
+        out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in tensors],
+        scratch_shapes=[pltpu.SemaphoreType.DMA] * n,
+        interpret=True,
+    )(*tensors)
+    return tuple(out)
+
+
+def _perm_table(perm: Sequence[tuple[int, int]], size: int) -> jax.Array:
+    tbl = [0] * size
+    for s, d in perm:
+        tbl[s] = d
+    return jnp.asarray(tbl, jnp.int32)
+
+
+def _remote_put_kernel(dst_ref, *refs):
+    """TPU branch: remote-copy every tensor to ``dst`` (scalar prefetch).
+
+    refs = (in_0.., out_0.., send_sem_0.., recv_sem_0..).  The out refs
+    are this device's *receive* buffers — written by the neighbour's
+    symmetric copy, exactly NVSHMEM's symmetric-heap contract.
+    """
+    n = len(refs) // 4
+    ins, outs = refs[:n], refs[n:2 * n]
+    send, recv = refs[2 * n:3 * n], refs[3 * n:]
+    dmas = [
+        pltpu.make_async_remote_copy(
+            src_ref=i, dst_ref=o, send_sem=s, recv_sem=r,
+            device_id=(dst_ref[0],),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        for i, o, s, r in zip(ins, outs, send, recv)
+    ]
+    for dma in dmas:
+        dma.start()
+    for dma in dmas:
+        dma.wait()
+
+
+def _tpu_remote_put(tensors: tuple[jax.Array, ...], axis: str,
+                    perm: Sequence[tuple[int, int]],
+                    size: int) -> tuple[jax.Array, ...]:
+    """In-kernel one-sided put along a single mesh axis (TPU only).
+
+    Untestable on the CPU CI (no RDMA in interpret mode); exercised on
+    hardware via ``backend="pallas", interpret=False``.
+    """
+    n = len(tensors)
+    dst = _perm_table(perm, size)[lax.axis_index(axis)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n,
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n,
+        scratch_shapes=([pltpu.SemaphoreType.DMA] * (2 * n)),
+    )
+    from ..compat import tpu_compiler_params
+
+    out = pl.pallas_call(
+        _remote_put_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in tensors],
+        compiler_params=tpu_compiler_params(
+            pltpu, has_side_effects=True, collective_id=0),
+    )(dst[None], *tensors)
+    return tuple(out)
+
+
+def deliver(
+    tensors: Sequence[jax.Array],
+    axes: tuple[str, ...],
+    perm: Sequence[tuple[int, int]],
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, ...]:
+    """Move ``tensors`` one hop along the channel route, Pallas-lowered.
+
+    The caller (Channel.put) owns the trace events; this function owns the
+    lowering branch choice.
+    """
+    tensors = tuple(tensors)
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu and not interpret and len(axes) == 1:
+        size = max(max(s, d) for s, d in perm) + 1
+        return _tpu_remote_put(tensors, axes[0], perm, size)
+    # emulation branch: ppermute carries the bytes (keeping the HLO route
+    # validatable), the landing kernel executes the semaphore protocol
+    moved = tuple(lax.ppermute(t, axes, perm=list(perm)) for t in tensors)
+    return landing_copy(moved)
+
+
+def fused_transfer_events(
+    channel,
+    shape: tuple[int, ...],
+    n_tensors: int,
+    *,
+    overlaps: str,
+) -> str:
+    """Record the schedule of an *in-kernel* fused put (ring_flash.py):
+    the kernel issues the copy at its first grid step and waits only after
+    its last compute block, so the event sequence is put → signal at
+    completion; the matching SemEvent('wait') is emitted by InFlight.wait
+    and the kernel wrapper contributes the 'compute' markers in between.
+    Returns the minted semaphore id.
+    """
+    sem = new_sem(channel.name, channel.stage)
+    _trace.emit(_trace.TransferEvent(
+        stream=channel.stream, channel=channel.name, stage=channel.stage,
+        axes=tuple(channel.axes), perm=tuple(channel.perm),
+        shape=tuple(shape), n_tensors=n_tensors,
+        overlaps=overlaps, backend="pallas"))
+    _trace.emit_sem(_trace.SemEvent(
+        kind="put", sem=sem, stream=channel.stream, channel=channel.name,
+        stage=channel.stage, overlap=True))
+    return sem

@@ -44,16 +44,22 @@ class Stream:
 
     ``channel`` mints a Channel bound to this stream at the current stage;
     ``next_stage`` advances the program counter.  Streams are trace-time
-    bookkeeping only — they add no ops of their own.
+    bookkeeping only — they add no ops of their own.  ``backend`` selects
+    the channel lowering for every stage of the program ("xla" | "pallas",
+    see channel.py); ``interpret`` runs Pallas channels in interpreter
+    mode (the CPU CI path).
     """
 
     name: str
     stage: int = 0
+    backend: str = "xla"
+    interpret: bool = True
 
     def channel(self, axes, perm, label: str = "") -> Channel:
         return Channel(axes=tuple(axes), perm=tuple(perm),
                        name=f"{self.name}.{label}" if label else self.name,
-                       stream=self.name, stage=self.stage)
+                       stream=self.name, stage=self.stage,
+                       backend=self.backend, interpret=self.interpret)
 
     def next_stage(self) -> int:
         self.stage += 1
@@ -69,20 +75,22 @@ class Stream:
 
 def ring_shift(layout: Any, *tensors: jax.Array, shift: int = 1,
                stream: Stream | None = None,
-               overlaps: str = "") -> InFlight:
+               overlaps: str = "", backend: str = "xla",
+               interpret: bool = True) -> InFlight:
     """One rotation inside each Ring group (same u): the KV hop of Ring
     Attention.  Returns the in-flight handle — the caller owns the wait."""
-    stream = stream or Stream("ring")
+    stream = stream or Stream("ring", backend=backend, interpret=interpret)
     return stream.put(layout.axes, layout.ring_perm(shift), *tensors,
                       label=f"shift{shift}", overlaps=overlaps)
 
 
 def torus_hop(layout: Any, k: int, *tensors: jax.Array,
               stream: Stream | None = None,
-              overlaps: str = "") -> InFlight:
+              overlaps: str = "", backend: str = "xla",
+              interpret: bool = True) -> InFlight:
     """Distance-k hop inside each Ulysses group (same r): stage k of the
     §4.3 decomposed all-to-all."""
-    stream = stream or Stream("torus")
+    stream = stream or Stream("torus", backend=backend, interpret=interpret)
     return stream.put(layout.axes, layout.ulysses_stage_perm(k), *tensors,
                       label=f"hop{k}", overlaps=overlaps)
 
@@ -97,6 +105,8 @@ def staged_all_to_all(
     *,
     split_axis: int,
     stream: Stream | None = None,
+    backend: str = "xla",
+    interpret: bool = True,
 ) -> jax.Array:
     """All-to-all restricted to Ulysses groups, as P_u - 1 channel stages.
 
@@ -108,7 +118,7 @@ def staged_all_to_all(
     whole program can be in flight at once, which is what lets Torus
     interleave these stages with attention compute.
     """
-    stream = stream or Stream("a2a")
+    stream = stream or Stream("a2a", backend=backend, interpret=interpret)
     p_u = layout.p_ulysses
     chunks = jnp.stack(jnp.split(x, p_u, axis=split_axis), axis=0)
     if p_u == 1:
@@ -130,11 +140,13 @@ def staged_ungroup(
     *,
     concat_axis: int,
     stream: Stream | None = None,
+    backend: str = "xla",
+    interpret: bool = True,
 ) -> jax.Array:
     """Inverse program: put ``stacked[j]`` back to ulysses-peer j and
     concatenate the received chunks along ``concat_axis`` (the fourth
     all-to-all of Ulysses attention / Torus Push-O; diagonal stays put)."""
-    stream = stream or Stream("a2a.inv")
+    stream = stream or Stream("a2a.inv", backend=backend, interpret=interpret)
     p_u = layout.p_ulysses
     if p_u == 1:
         return jnp.squeeze(stacked, axis=0)
@@ -157,6 +169,8 @@ def pipe_handoff(
     shift: int = 1,
     batch_axes: tuple[str, ...] | None = None,
     stream: Stream | None = None,
+    backend: str = "xla",
+    interpret: bool = True,
 ) -> jax.Array:
     """Stage-boundary hand-off of the displaced patch pipeline: rotate the
     activation one stage forward along the pipe ``axis``.
@@ -173,7 +187,7 @@ def pipe_handoff(
 
     Must be called OUTSIDE any shard_map (it opens its own over ``axis``).
     """
-    stream = stream or Stream("pipe")
+    stream = stream or Stream("pipe", backend=backend, interpret=interpret)
     pp = mesh.shape[axis]
     if pp == 1:
         return x

@@ -127,6 +127,8 @@ def grouped_all_to_all(
     *,
     split_axis: int,
     stack_axis: int = 0,
+    backend: str = "xla",
+    interpret: bool = True,
 ) -> jax.Array:
     """All-to-all restricted to Ulysses groups of ``layout``.
 
@@ -139,11 +141,13 @@ def grouped_all_to_all(
     diagonal chunk (j == my u) is **stationary** — the paper's §4.3
     observation — and never moves.
     """
-    return staged_all_to_all(x, layout, split_axis=split_axis)
+    return staged_all_to_all(x, layout, split_axis=split_axis,
+                             backend=backend, interpret=interpret)
 
 
 def monolithic_all_to_all(
-    x: jax.Array, layout: GroupLayout, *, split_axis: int
+    x: jax.Array, layout: GroupLayout, *, split_axis: int,
+    backend: str = "xla", interpret: bool = True,
 ) -> jax.Array:
     """Baseline atomic all-to-all (what Ulysses does before Torus).
 
@@ -152,18 +156,21 @@ def monolithic_all_to_all(
     falls back to the staged implementation (XLA's all_to_all has no
     subgroup support over a partial logical factor of a named axis).
     """
-    if layout.p_ring == 1 and layout.p_ulysses == layout.size:
+    if (layout.p_ring == 1 and layout.p_ulysses == layout.size
+            and backend == "xla"):
         chunks = jnp.stack(jnp.split(x, layout.p_ulysses, axis=split_axis), axis=0)
         # tiled all-to-all over the leading [P_u] axis: slice j -> peer j,
         # received slices re-stacked in source order — one atomic XLA op.
         return lax.all_to_all(
             chunks, layout.axes, split_axis=0, concat_axis=0, tiled=True
         )
-    return grouped_all_to_all(x, layout, split_axis=split_axis)
+    return grouped_all_to_all(x, layout, split_axis=split_axis,
+                              backend=backend, interpret=interpret)
 
 
 def ungroup_all_to_all(
-    stacked: jax.Array, layout: GroupLayout, *, concat_axis: int
+    stacked: jax.Array, layout: GroupLayout, *, concat_axis: int,
+    backend: str = "xla", interpret: bool = True,
 ) -> jax.Array:
     """Inverse transform: send ``stacked[j]`` back to ulysses-peer j and
     concatenate the received chunks along ``concat_axis`` (the fourth
@@ -171,9 +178,11 @@ def ungroup_all_to_all(
     p_u = layout.p_ulysses
     if p_u == 1:
         return jnp.squeeze(stacked, axis=0)
-    if layout.p_ring == 1 and layout.p_ulysses == layout.size:
+    if (layout.p_ring == 1 and layout.p_ulysses == layout.size
+            and backend == "xla"):
         moved = lax.all_to_all(
             stacked, layout.axes, split_axis=0, concat_axis=0, tiled=True
         )
         return jnp.concatenate(list(moved), axis=concat_axis)
-    return staged_ungroup(stacked, layout, concat_axis=concat_axis)
+    return staged_ungroup(stacked, layout, concat_axis=concat_axis,
+                          backend=backend, interpret=interpret)

@@ -82,6 +82,12 @@ class NetworkModel:
     flops: float = 197e12  # peak bf16 FLOP/s per device
     mfu: float = 0.5  # assumed attention kernel efficiency
     bytes_per_elem: int = 2
+    # Per-transfer-step issue gap when comm is scheduled BETWEEN ops (the
+    # "xla" channel backend): each ring step / a2a stage pays one
+    # dispatch+schedule window before its DMA can start.  The fused
+    # kernel path ("pallas", DESIGN.md §8.1) issues the put from inside
+    # the attention kernel and pays none of it.
+    step_issue_overhead: float = 2e-6  # s per inter-op transfer step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +115,7 @@ def attention_layer_latency(
     overlap_inter: bool = False,
     overlap_intra: bool = True,
     one_sided: bool = False,
+    fused_comm: bool = False,
 ) -> dict[str, float]:
     """Estimate one distributed attention layer's latency components.
 
@@ -120,6 +127,12 @@ def attention_layer_latency(
     rendezvous *per transfer step* (P_r - 1 ring steps + the a2a stages,
     Fig. 4); the one-sided design pays exactly two barriers per layer
     (Algorithm 1 lines 16/36), independent of step count.
+
+    ``fused_comm`` models the Pallas channel backend (DESIGN.md §8.1):
+    when the attention kernel issues its own puts, the per-step inter-op
+    issue gap (``net.step_issue_overhead`` per ring step / a2a stage)
+    disappears — the kernel-fused analogue of the paper's in-kernel
+    NVSHMEM puts.
     """
     inter_v = (swift_inter_volume if swift else usp_inter_volume)(plan, wl.blhd)
     intra_v = intra_volume(plan, wl.blhd, swift=swift)
@@ -136,14 +149,17 @@ def attention_layer_latency(
         intra_steps = ring_steps if plan.ulysses_inter else a2a_stages
         t_sync = (inter_steps * net.inter_lat * (plan.n_machines > 1)
                   + intra_steps * net.intra_lat * (plan.m_per_machine > 1))
+    t_issue = (0.0 if fused_comm
+               else (ring_steps + a2a_stages) * net.step_issue_overhead)
     exposed_intra = 0.0 if overlap_intra else t_intra
     exposed_inter = max(0.0, t_inter - t_comp) if overlap_inter else t_inter
-    total = t_comp + exposed_inter + exposed_intra + t_sync
+    total = t_comp + exposed_inter + exposed_intra + t_sync + t_issue
     return {
         "t_compute": t_comp,
         "t_inter": t_inter,
         "t_intra": t_intra,
         "t_sync": t_sync,
+        "t_issue": t_issue,
         "t_total": total,
         "inter_elems": inter_v,
         "intra_elems": intra_v,
@@ -187,13 +203,15 @@ def sp_step_latency(
     guided: bool = True,
     guidance_branches: int = 2,
     swift: bool = True,
+    comm_backend: str = "xla",
 ) -> dict[str, float]:
     """Predicted per-sampler-step latency of pure SP serving: ``n_layers``
     distributed attention layers (Torus overlap + one-sided sync), times
     the k guidance branches when classifier-free guidance runs them
     sequentially."""
     lat = attention_layer_latency(
-        plan, wl, net, swift=swift, overlap_inter=True, one_sided=True)
+        plan, wl, net, swift=swift, overlap_inter=True, one_sided=True,
+        fused_comm=comm_backend == "pallas")
     branches = guidance_branches if guided else 1
     return {
         "t_step": branches * n_layers * lat["t_total"],
@@ -214,6 +232,7 @@ def hybrid_step_latency(
     num_patches: int | None = None,
     num_steps: int = 20,
     overlap_pp: bool = True,
+    comm_backend: str = "xla",
 ) -> dict[str, float]:
     """Predicted per-sampler-step latency of the (cfg, pp, P_u, P_r) plan.
 
@@ -236,7 +255,8 @@ def hybrid_step_latency(
     sub = hplan.sp
     lat = attention_layer_latency(
         sub, wl, net, swift=sub.n_machines > 1,
-        overlap_inter=True, one_sided=True)
+        overlap_inter=True, one_sided=True,
+        fused_comm=comm_backend == "pallas")
     branches = guidance_branches if (guided and hplan.cfg == 1) else 1
     t_layers = branches * (n_layers / hplan.pp) * lat["t_total"]
 
@@ -281,6 +301,7 @@ def plan_step_latency(
     guidance_branches: int = 2,
     num_patches: int | None = None,
     num_steps: int = 20,
+    comm_backend: str | None = None,
 ) -> dict[str, float]:
     """Predicted per-sampler-step latency of ANY hybrid plan — the single
     entry point the request scheduler scores candidate plans through.
@@ -288,16 +309,23 @@ def plan_step_latency(
     Dispatches to ``sp_step_latency`` for degenerate (cfg=1, pp=1) plans
     and ``hybrid_step_latency`` otherwise; both return a dict whose
     ``t_step`` is the admission policy's scoring quantity.
+
+    ``comm_backend`` overrides the plan's own backend annotation (None =
+    use ``hplan.comm_backend``); "pallas" scores the kernel-fused
+    schedule, which drops the per-step issue overhead — this is how the
+    planner and the scheduler's plan cache prefer the fused path when it
+    wins.
     """
+    cb = comm_backend if comm_backend is not None else hplan.comm_backend
     if hplan.cfg == 1 and hplan.pp == 1:
         return sp_step_latency(
             hplan.sp, wl, net, n_layers=n_layers, guided=guided,
             guidance_branches=guidance_branches,
-            swift=hplan.sp.ulysses_inter)
+            swift=hplan.sp.ulysses_inter, comm_backend=cb)
     return hybrid_step_latency(
         hplan, wl, net, n_layers=n_layers, guided=guided,
         guidance_branches=guidance_branches, num_patches=num_patches,
-        num_steps=num_steps)
+        num_steps=num_steps, comm_backend=cb)
 
 
 def network_model_from_dict(d: dict) -> NetworkModel:

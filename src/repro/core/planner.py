@@ -121,6 +121,11 @@ class HybridPlan:
     m_per_machine: int  # M of the full cluster
     cfg_machines: int = 1  # machine-level factor consumed by cfg
     pp_machines: int = 1  # machine-level factor consumed by pp
+    # Comm lowering the plan will execute with (DESIGN.md §8.1): "pallas"
+    # scores the kernel-fused schedule (no per-step issue overhead) in
+    # comm_model.plan_step_latency and selects the fused ring kernel via
+    # SPConfig.comm_backend at execution time.
+    comm_backend: str = "xla"
 
     @property
     def total_devices(self) -> int:
@@ -139,6 +144,7 @@ class HybridPlan:
     def validate(self) -> None:
         assert self.cfg >= 1, self
         assert self.pp >= 1, self
+        assert self.comm_backend in ("xla", "pallas"), self
         self.sp.validate()
         assert self.total_devices == self.n_machines * self.m_per_machine, self
 
@@ -167,6 +173,7 @@ def plan_hybrid(
     n_layers: int | None = None,
     swift: bool = True,
     replicate_kv: bool = False,
+    comm_backend: str = "xla",
 ) -> HybridPlan:
     """Plan (cfg, pp, P_u, P_r) for N machines × M chips.
 
@@ -195,6 +202,7 @@ def plan_hybrid(
         cfg=cfg, pp=pp, sp=sp,
         n_machines=n_machines, m_per_machine=m_per_machine,
         cfg_machines=cfg_mach, pp_machines=pp_mach,
+        comm_backend=comm_backend,
     )
     h.validate()
     return h
@@ -215,6 +223,7 @@ def candidate_hybrid_plans(
     max_pp: int = 4,
     swift: bool = True,
     replicate_kv: bool = False,
+    comm_backend: str = "xla",
 ) -> list[HybridPlan]:
     """Every feasible (cfg, pp) split of the cluster, deduplicated by the
     resulting (cfg, pp, P_u, P_r) — the candidate set ``plan_for_shape``
@@ -230,7 +239,8 @@ def candidate_hybrid_plans(
                 h = plan_hybrid(
                     n_machines, m_per_machine, num_q_heads, num_kv_heads,
                     cfg_parallel=cfg_parallel, cfg_degree=cfg_degree, pp=pp,
-                    n_layers=n_layers, swift=swift, replicate_kv=replicate_kv)
+                    n_layers=n_layers, swift=swift, replicate_kv=replicate_kv,
+                    comm_backend=comm_backend)
             except ValueError:
                 continue
             key = (h.cfg, h.pp, h.sp.p_ulysses, h.sp.p_ring)
@@ -258,6 +268,7 @@ def plan_for_shape(
     cfg_degree: int = 2,
     max_pp: int = 4,
     swift: bool = True,
+    comm_backend: str = "xla",
 ) -> tuple[HybridPlan, dict]:
     """Select the (cfg, pp, P_u, P_r) plan with the lowest predicted step
     latency FOR A SPECIFIC WORKLOAD SHAPE (batch, seq) — the per-bucket
@@ -270,7 +281,8 @@ def plan_for_shape(
     net = net or NetworkModel()
     cands = candidates if candidates is not None else candidate_hybrid_plans(
         n_machines, m_per_machine, num_q_heads, num_kv_heads,
-        n_layers=n_layers, cfg_degree=cfg_degree, max_pp=max_pp, swift=swift)
+        n_layers=n_layers, cfg_degree=cfg_degree, max_pp=max_pp, swift=swift,
+        comm_backend=comm_backend)
     assert cands, "no feasible hybrid plan"
     wl = LayerWorkload(batch=batch, seq=seq, heads=num_q_heads,
                        head_dim=head_dim)

@@ -65,9 +65,16 @@ class SPConfig:
     # Beyond-paper (§Perf): cap the materialized score matrix per attend at
     # [B, H, Lq, attn_kv_block] (XLA-level flash blocking); None = off.
     attn_kv_block: int | None = None
+    # Comm lowering (DESIGN.md §8.1): "xla" = ppermute + barrier, overlap
+    # left to XLA's scheduler; "pallas" = in-kernel DMA + semaphores (the
+    # fused ring_flash path).  kernel_interpret runs the Pallas branch in
+    # interpreter mode — required on CPU (the CI path), off on real TPUs.
+    comm_backend: str = "xla"
+    kernel_interpret: bool = True
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
+        assert self.comm_backend in ("xla", "pallas"), self.comm_backend
 
     def effective_batch_axes(
         self, mesh: jax.sharding.Mesh | None = None
@@ -110,20 +117,21 @@ def resolve_layout(
 
 
 def _usp_like(q, k, v, layout: GroupLayout, *, scale, causal, window, unroll,
-              kv_block=None):
+              kv_block=None, backend="xla", interpret=True):
     """Shared body for usp/swift/ulysses/ring: monolithic Ulysses gather →
     Ring Attention → scatter.  The layout decides which boundary each
     technique crosses (that single bit is the paper's §4.2 contribution)."""
     ls = q.shape[1]
-    g = gather_qkv(q, k, v, layout)
+    g = gather_qkv(q, k, v, layout, backend=backend, interpret=interpret)
     kpos_fn = lambda owner_r: group_positions(layout, ls, owner_r)
     part = ring_attention(
         g.q, g.k, g.v, layout,
         q_pos=g.q_pos, k_pos_fn=kpos_fn,
         scale=scale, causal=causal, window=window, unroll=unroll,
-        kv_block=kv_block,
+        kv_block=kv_block, backend=backend, interpret=interpret,
     )
-    return scatter_o(finalize(part, dtype=q.dtype), layout)
+    return scatter_o(finalize(part, dtype=q.dtype), layout,
+                     backend=backend, interpret=interpret)
 
 
 def sp_attention(
@@ -161,11 +169,13 @@ def sp_attention(
             torus_attention, layout=layout, scale=scale, causal=causal,
             window=window, unroll=cfg.unroll_ring,
             fused_pull_q=cfg.torus_fused_pull_q, kv_block=cfg.attn_kv_block,
+            backend=cfg.comm_backend, interpret=cfg.kernel_interpret,
         )
     else:
         body = partial(
             _usp_like, layout=layout, scale=scale, causal=causal,
             window=window, unroll=cfg.unroll_ring, kv_block=cfg.attn_kv_block,
+            backend=cfg.comm_backend, interpret=cfg.kernel_interpret,
         )
 
     fn = shard_map(

@@ -88,9 +88,16 @@ def torus_attention(
     unroll: bool = True,
     fused_pull_q: bool = False,
     kv_block: int | None = None,
+    backend: str = "xla",
+    interpret: bool = True,
 ) -> jax.Array:
     """Full SwiftFusion attention with the Torus schedule; returns O in the
     original [B, Ls, Hq, D] sharding.
+
+    ``backend="pallas"`` lowers every transfer through the Pallas channel
+    backend (semaphore-tracked puts, DESIGN.md §8.1) and runs each
+    per-stage RINGATTN through the fused ring_flash kernel;
+    ``interpret`` selects interpreter mode (the CPU CI path).
 
     ``fused_pull_q`` is a beyond-paper optimization (EXPERIMENTS.md §Perf):
     Algorithm 1 invokes RINGATTN once per Pull-Q stage, re-circulating the
@@ -124,11 +131,11 @@ def torus_attention(
             jnp.take(qc, u, axis=0), k_diag, v_diag, layout,
             q_pos=my_pos(), k_pos_fn=diag_kpos_fn,
             scale=scale, causal=causal, window=window, unroll=unroll,
-            kv_block=kv_block,
+            kv_block=kv_block, backend=backend, interpret=interpret,
         )
         acc = _merge_slice(acc, part, u * ls, ls)
 
-    stream = Stream("torus")
+    stream = Stream("torus", backend=backend, interpret=interpret)
 
     # ---- Pull-Q stages: Q chunks arrive one hop-distance k at a time
     q_recv = [None] * p_u  # q_recv[j] = Q chunk from ulysses peer j
@@ -142,7 +149,7 @@ def torus_attention(
                 recv, k_diag, v_diag, layout,
                 q_pos=chunk_pos(src), k_pos_fn=diag_kpos_fn,
                 scale=scale, causal=causal, window=window, unroll=unroll,
-                kv_block=kv_block,
+                kv_block=kv_block, backend=backend, interpret=interpret,
             )
             acc = _pin(_merge_slice(acc, part, src * ls, ls))
         q_recv[kstage] = (src, recv)
@@ -163,7 +170,7 @@ def torus_attention(
             q_gather, k_diag, v_diag, layout,
             q_pos=q_pos_all, k_pos_fn=diag_kpos_fn,
             scale=scale, causal=causal, window=window, unroll=unroll,
-            kv_block=kv_block,
+            kv_block=kv_block, backend=backend, interpret=interpret,
         )
         acc = merge(acc, part)
 
@@ -174,17 +181,17 @@ def torus_attention(
             layout, kstage,
             jnp.take(kc, (u + kstage) % p_u, axis=0),
             jnp.take(vc, (u + kstage) % p_u, axis=0),
-            stream=stream, overlaps="gathered-Q attend").payload
+            stream=stream, overlaps="gathered-Q attend").wait()
         (k_recv, v_recv), acc = _gate((k_recv, v_recv), acc)
         kpos_fn = lambda owner_r, s=src: _rank_of(layout, s, owner_r) * ls + jnp.arange(ls)
         part = ring_attention(
             q_gather, k_recv, v_recv, layout,
             q_pos=q_pos_all, k_pos_fn=kpos_fn,
             scale=scale, causal=causal, window=window, unroll=unroll,
-            kv_block=kv_block,
+            kv_block=kv_block, backend=backend, interpret=interpret,
         )
         acc = merge(acc, part)
 
     # ---- Push-O: staged inverse all-to-all; diagonal O never moves
     o = finalize(acc, dtype=q.dtype)  # [B, P_u * Ls, h, D]
-    return scatter_o(o, layout)
+    return scatter_o(o, layout, backend=backend, interpret=interpret)

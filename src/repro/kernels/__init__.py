@@ -1,9 +1,18 @@
 """Pallas TPU kernels for the paper's compute hot-spot: FlashAttention over
 multiple discontiguous Q/KV chunks with fused online-softmax merge
-(Algorithm 2, Appendix B/C)."""
-from .ops import flash_attention, flash_attention_segments
+(Algorithm 2, Appendix B/C), plus the fused ring-step kernel that issues
+its own KV forwarding DMA mid-kernel (DESIGN.md §8.1)."""
+from .ops import (
+    STATIC_ARGNAMES,
+    flash_attention,
+    flash_attention_segments,
+    reset_trace_counts,
+    trace_counts,
+)
 from .ref import flash_attention_ref
+from .ring_flash import ring_flash_step
 from .rwkv6_wkv import rwkv6_wkv
 
-__all__ = ["flash_attention", "flash_attention_segments",
-           "flash_attention_ref", "rwkv6_wkv"]
+__all__ = ["STATIC_ARGNAMES", "flash_attention", "flash_attention_segments",
+           "flash_attention_ref", "reset_trace_counts", "ring_flash_step",
+           "rwkv6_wkv", "trace_counts"]

@@ -1,4 +1,4 @@
-"""Jitted wrappers around the flash_mqkv Pallas kernel.
+"""Jitted wrappers around the flash_mqkv / ring_flash Pallas kernels.
 
 ``flash_attention``     — [B, L, H, D]-layout entry point with GQA,
                           padding to block multiples, position arrays.
@@ -6,15 +6,45 @@
                           *list* of discontiguous KV chunks, carrying the
                           online-softmax state across kernel calls and
                           finalizing once (Appendix C).
+
+Dispatch discipline: every variant knob that selects a different lowering
+— ``backend`` ("pallas" kernel vs "xla" jnp fallback), ``fused`` (the
+ring_flash kernel that issues its own DMA vs plain flash_mqkv), and
+``interpret`` — lives in ONE variant tuple (``STATIC_ARGNAMES``), the
+``lru_cache`` key of ``_dispatch``, which builds one jitted closure per
+key.  A partial key (the historical bug: keying on ``interpret`` but not
+``backend``) would hand the xla variant a cached pallas trace and
+vice-versa; ``tests/test_ring_flash.py`` counts traces per key to pin
+this down.
 """
 from __future__ import annotations
 
-from functools import partial
+import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
 
 from .flash_mqkv import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_mqkv
+from .ref import flash_attention_ref
+from .ring_flash import ring_flash_step
+
+# the ONE variant key: lowering variants must never share a jit cache
+# entry; asserted below to match _dispatch's signature exactly
+STATIC_ARGNAMES = ("causal", "window", "scale", "block_q", "block_k",
+                   "interpret", "backend", "fused")
+
+# traces per static key (trace-time side effect; the regression counter)
+_trace_counts: dict[tuple, int] = {}
+
+
+def trace_counts() -> dict[tuple, int]:
+    """Snapshot of jit traces per static dispatch key."""
+    return dict(_trace_counts)
+
+
+def reset_trace_counts() -> None:
+    _trace_counts.clear()
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
@@ -37,8 +67,67 @@ def _unflatten_heads(x: jax.Array, b: int, h: int) -> jax.Array:
     return x.reshape(b, h, l, d).transpose(0, 2, 1, 3)
 
 
-@partial(jax.jit, static_argnames=(
-    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def _step(qf, kf, vf, qpp, kpp, *, group, scale, causal, window, state,
+          finalize, block_q, block_k, interpret, backend, fused):
+    """One kernel step on flattened [BH, L, D] operands, by variant."""
+    if backend == "xla":
+        kr = jnp.repeat(kf, group, axis=0) if group > 1 else kf
+        vr = jnp.repeat(vf, group, axis=0) if group > 1 else vf
+        out = flash_attention_ref(
+            qf, kr, vr, qpp, kpp, scale=scale, causal=causal, window=window,
+            state=state, finalize=finalize)
+        return out if not finalize else (out, None, None)
+    if fused:
+        (o, l, m), _ = ring_flash_step(
+            qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
+            window=window, state=state, finalize=finalize,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+        return o, l, m
+    return flash_mqkv(
+        qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
+        window=window, state=state, finalize=finalize,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _dispatch(causal, window, scale, block_q, block_k, interpret, backend,
+              fused):
+    """Build (and cache) the jitted impl for one static-variant key.
+
+    The lru_cache key IS the full variant tuple (one jitted closure per
+    key — the knobs are closure constants, not jit static args), so no
+    two variants can collide on a cache entry.
+    """
+    key = (causal, window, scale, block_q, block_k, interpret, backend,
+           fused)
+
+    @jax.jit
+    def impl(q, k, v, q_pos, k_pos):
+        _trace_counts[key] = _trace_counts.get(key, 0) + 1
+        b, lq, hq, d = q.shape
+        _, lk, hkv, _ = k.shape
+        group = hq // hkv
+        bq = min(block_q, max(8, lq))
+        bk = min(block_k, max(8, lk))
+        qf = _pad_to(_flatten_heads(q), 1, bq)
+        kf = _pad_to(_flatten_heads(k), 1, bk)
+        vf = _pad_to(_flatten_heads(v), 1, bk)
+        qpp = _pad_to(q_pos.astype(jnp.int32), 0, bq, value=0)
+        kpp = _pad_to(k_pos.astype(jnp.int32), 0, bk, value=-1)
+        o, _, _ = _step(
+            qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
+            window=window, state=None, finalize=True, block_q=bq, block_k=bk,
+            interpret=interpret, backend=backend, fused=fused)
+        return _unflatten_heads(o[:, :lq], b, hq)
+
+    return impl
+
+
+# the canonical key ordering and the dispatch signature must not drift
+assert tuple(
+    inspect.signature(_dispatch.__wrapped__).parameters) == STATIC_ARGNAMES
+
+
 def flash_attention(
     q: jax.Array,  # [B, Lq, Hq, D]
     k: jax.Array,  # [B, Lk, Hkv, D]
@@ -52,30 +141,27 @@ def flash_attention(
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
+    backend: str = "pallas",
+    fused: bool = False,
 ) -> jax.Array:
-    """Drop-in flash attention; returns [B, Lq, Hq, D]."""
-    b, lq, hq, d = q.shape
-    _, lk, hkv, _ = k.shape
-    group = hq // hkv
+    """Drop-in flash attention; returns [B, Lq, Hq, D].
+
+    ``backend="pallas"`` runs the Pallas kernel (``fused=True`` selects
+    the ring_flash variant that also issues its forwarding DMA);
+    ``backend="xla"`` runs the pure-jnp lowering (platforms without
+    Pallas).  All three produce the same values.  Note ``fused=True``
+    here discards the forward buffers (and pays their copy) — its
+    consumer is core/ring.py's pallas path; on this entry point it
+    exists for parity and dispatch testing, not as a perf knob.
+    """
+    lq, lk = q.shape[1], k.shape[1]
     if q_pos is None:
         q_pos = jnp.arange(lq, dtype=jnp.int32)
     if k_pos is None:
         k_pos = jnp.arange(lk, dtype=jnp.int32)
-
-    bq = min(block_q, max(8, lq))
-    bk = min(block_k, max(8, lk))
-    qf = _pad_to(_flatten_heads(q), 1, bq)
-    kf = _pad_to(_flatten_heads(k), 1, bk)
-    vf = _pad_to(_flatten_heads(v), 1, bk)
-    qpp = _pad_to(q_pos.astype(jnp.int32), 0, bq, value=0)
-    kpp = _pad_to(k_pos.astype(jnp.int32), 0, bk, value=-1)
-
-    o, _, _ = flash_mqkv(
-        qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
-        window=window, finalize=True, block_q=bq, block_k=bk,
-        interpret=interpret,
-    )
-    return _unflatten_heads(o[:, :lq], b, hq)
+    impl = _dispatch(causal, window, scale, block_q, block_k, interpret,
+                     backend, fused)
+    return impl(q, k, v, q_pos, k_pos)
 
 
 def flash_attention_segments(
@@ -89,6 +175,8 @@ def flash_attention_segments(
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
+    backend: str = "pallas",
+    fused: bool = False,
 ) -> jax.Array:
     """Attention of one Q against multiple discontiguous KV chunks — the
     RINGATTN inner loop of Algorithm 1 with the Algorithm-2 fused merge:
@@ -110,11 +198,10 @@ def flash_attention_segments(
         vf = _pad_to(_flatten_heads(v), 1, bk)
         kpp = _pad_to(k_pos.astype(jnp.int32), 0, bk, value=-1)
         last = i == len(segments) - 1
-        out = flash_mqkv(
+        out = _step(
             qf, kf, vf, qpp, kpp, group=group, scale=scale, causal=causal,
-            window=window, state=state, finalize=last,
-            block_q=bq, block_k=bk, interpret=interpret,
-        )
+            window=window, state=state, finalize=last, block_q=bq, block_k=bk,
+            interpret=interpret, backend=backend, fused=fused)
         if last:
             o = out[0]
         else:

@@ -10,8 +10,17 @@ intended one-sided schedules (repro.comm.trace), compiles, and validates:
     vs attend, pipe hand-off vs stage compute) is admissible in the
     compiled program.
 
+The gate then runs ONCE MORE with ``backend="pallas"`` (DESIGN.md §8.1,
+interpret mode): the same swift_torus program through the Pallas channel
+backend + fused ring kernel, validating (a) the emulation branch's wire
+moves still carry the intended routes in HLO and (b) the recorded
+semaphore schedule is a valid protocol pairing — every put signaled
+exactly once, no wait-before-put, and no blocking wait before the last
+compute block of a fused step.
+
 Exit code 1 on any failure, so schedule regressions (a barrier that
-serialises a put, a refactor that silently drops a transfer) fail fast.
+serialises a put, a refactor that silently drops a transfer or fires a
+semaphore twice) fail fast.
 
     python -m repro.launch.commcheck
 """
@@ -97,7 +106,30 @@ def main() -> int:
         return 1
     reports.append(comm.validate(tr, lowered.compile().as_text(), hmesh))
 
-    ok = True
+    # --- 3. Pallas backend (DESIGN.md §8.1): same swift_torus program,
+    # semaphore-tracked channels + fused ring kernel, interpret mode -----
+    psp = dataclasses.replace(sp, comm_backend="pallas", kernel_interpret=True)
+    with comm.record("swift_torus_pallas") as tr:
+        lowered = jax.jit(
+            lambda q, k, v: sp_attention(q, k, v, mesh=mesh, cfg=psp)
+        ).lower(q, k, v)
+    if not any(e.backend == "pallas" for e in tr.events):
+        print("commcheck FAIL: no pallas-backend puts recorded in the "
+              "swift_torus_pallas trace")
+        return 1
+    if not tr.sem_events:
+        print("commcheck FAIL: pallas backend recorded no semaphore events")
+        return 1
+    # route presence still holds on the emulation branch (the wire move is
+    # a ppermute with the same pairs); overlap of the fused puts is the
+    # kernel's own schedule, validated at the semaphore level below, so
+    # HLO-level overlap admission is not required here.
+    reports.append(comm.validate(tr, lowered.compile().as_text(), mesh,
+                                 require_overlap=False))
+    sem_rep = comm.validate_semaphores(tr)
+    print(sem_rep.summary())
+
+    ok = sem_rep.ok
     for rep in reports:
         print(rep.summary())
         ok &= rep.ok

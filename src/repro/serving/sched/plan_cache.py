@@ -41,12 +41,16 @@ class PlanCache:
                  dp: int = 1, net: NetworkModel | None = None,
                  candidates: list[HybridPlan] | None = None,
                  base_patches: int = 0,
-                 patch_multipliers: tuple[int, ...] = (1, 2, 4)):
+                 patch_multipliers: tuple[int, ...] = (1, 2, 4),
+                 comm_backend: str = "xla"):
         """``candidates`` fixes the plan set (the engine passes the single
         plan its mesh can execute; the benchmark passes None to enumerate
         every feasible (cfg, pp) split).  ``base_patches`` > 0 enables
         patch-count co-selection even for pp = 1 plans (single-stage
-        displaced pipelining)."""
+        displaced pipelining).  ``comm_backend`` is the channel lowering
+        the engine will execute with ("pallas" = kernel-fused, DESIGN.md
+        §8.1); candidate plans are scored under it, so the fused path's
+        lower per-step issue cost is what the selection sees."""
         self.net = net or NetworkModel()
         self.heads = heads
         self.head_dim = head_dim
@@ -58,10 +62,12 @@ class PlanCache:
         self.dp = max(dp, 1)
         self.base_patches = base_patches
         self.patch_multipliers = patch_multipliers
+        self.comm_backend = comm_backend
         if candidates is None:
             candidates = candidate_hybrid_plans(
                 n_machines, m_per_machine, heads, kv_heads, n_layers=n_layers,
-                cfg_degree=max(guidance_branches, 2))
+                cfg_degree=max(guidance_branches, 2),
+                comm_backend=comm_backend)
         self.candidates = list(candidates)
         assert self.candidates, "plan cache needs at least one candidate"
         self.plans: dict[tuple[int, int], PlanChoice] = {}
@@ -97,7 +103,8 @@ class PlanCache:
                     h, wl, self.net, n_layers=self.n_layers,
                     guided=self.guided,
                     guidance_branches=self.guidance_branches,
-                    num_patches=np_ or None, num_steps=self.num_steps)
+                    num_patches=np_ or None, num_steps=self.num_steps,
+                    comm_backend=self.comm_backend)
                 t = pred["t_step"]
                 if best is None or t < best.t_step:
                     best = PlanChoice(h, np_, pred, t, t * self.num_steps)
