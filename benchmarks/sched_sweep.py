@@ -1,11 +1,13 @@
-"""Request-scheduler sweep (DESIGN.md §9): resolution-bucketed SLA-aware
-continuous batching vs the greedy same-length batcher, on a simulated
-mixed-resolution queue.
+"""Request-scheduler sweep (DESIGN.md §9/§10): resolution-bucketed
+SLA-aware continuous batching vs the greedy same-length batcher, plus the
+adaptive control loop's preemptive variant, on simulated
+mixed-resolution queues.
 
-The analytical part runs both policies through a discrete-event
-simulation of one serving pipeline (per-replica cluster N=2 machines x
-M=4 devices, dp=2 data-parallel replicas of the batch) over the SAME
-deterministic arrival stream of 256/512/1024-latent requests with SLAs:
+The analytical part runs the policies through a **step-granular**
+discrete-event simulation of one serving pipeline (per-replica cluster
+N=2 machines x M=4 devices, dp=2 data-parallel replicas of the batch)
+over the SAME deterministic arrival stream of 256/512/1024-latent
+requests with SLAs:
 
   * **greedy** — the pre-scheduler ``DiTServer`` behavior: head-of-line
     same-length batching, immediate admission (fragment batches pay dp
@@ -15,19 +17,29 @@ deterministic arrival stream of 256/512/1024-latent requests with SLAs:
     deadline/aging-scored cross-bucket admission with padded batches
     deferred while slack allows, and a per-bucket ``plan_hybrid``
     selection (cfg/pp split + patch count) from the plan cache.
+  * **preemptive** — bucketed plus the §10 control loop: between sampler
+    steps a ``PreemptionPolicy`` may park the running batch (requests
+    requeued with accrued age) for an SLA-critical bucket; optionally an
+    ``ArrivalForecaster`` bounds padded-batch deferral.
 
-Rows report predicted makespan, padded-token work, worst queue wait and
-SLA misses per policy, plus the per-bucket plan the cache selected.  The
-acceptance claims (ISSUE 3) — strictly less padded-token work, strictly
-lower makespan, starvation bound honored, one plan per bucket shape —
-are asserted by ``--smoke``, which additionally drives a real tiny
-``DiTServer`` end-to-end on 8 simulated CPU devices and checks the step
-cache traced exactly once per bucket shape.
+The simulation is deterministic end-to-end — arrivals come from seeded
+generators (``bursty_stream`` / ``diurnal_stream``; no wall clock
+anywhere) or from a recorded trace (``--replay trace.json``, written by
+``--emit-trace``).  Rows report predicted makespan, padded-token work,
+worst queue wait, SLA-met fraction and preemptions per policy, plus the
+per-bucket plan the cache selected.  ``--smoke`` asserts the PR-3
+acceptance claims, the ISSUE-5 claim (the preemptive control loop
+achieves a STRICTLY higher SLA-met fraction than the non-preemptive
+scheduler on the seeded bursty stream), a replay round-trip, and drives
+a real tiny ``DiTServer`` end-to-end on 8 simulated CPU devices.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import pathlib
+import random
 import sys
 from collections import deque
 from typing import NamedTuple
@@ -35,6 +47,8 @@ from typing import NamedTuple
 from repro.core import plan_hybrid
 from repro.core.comm_model import NetworkModel
 from repro.serving.sched import (
+    ArrivalForecaster,
+    PreemptionPolicy,
     RequestScheduler,
     SchedConfig,
     PlanCache,
@@ -80,6 +94,79 @@ def request_stream(n: int = 30) -> list[SimRequest]:
         reqs.append(SimRequest(rid=i, seq_len=seq, arrival=round(t, 5),
                                sla=SLAS[seq]))
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# seeded load generators + trace replay (ISSUE 5; no wall clock anywhere)
+# ---------------------------------------------------------------------------
+
+# bursty scenario: latency-critical 256 tier vs throughput 1024 tier
+BURST_SLA_256 = 0.012  # s — tighter than one 1024 batch (~30 ms), looser
+BURST_SLA_1024 = 1.5   # than one 256 batch (~4 ms): preemption territory
+
+
+def bursty_stream(n_bursts: int = 8, seed: int = 7) -> list[SimRequest]:
+    """Steady loose-SLA 1024 background traffic with periodic bursts of
+    tight-SLA 256 requests landing mid-batch — the workload where
+    step-level preemption pays: a 256 burst that arrives while a ~30 ms
+    1024 batch runs misses its ~12 ms SLA unless the batch is parked."""
+    rnd = random.Random(seed)
+    reqs: list[SimRequest] = []
+    rid = 0
+    t = 0.0
+    next_burst = 0.02
+    while len([r for r in reqs if r.seq_len == 256]) < n_bursts * 4:
+        t += rnd.uniform(0.004, 0.012)
+        if t >= next_burst:
+            bt = next_burst
+            for _ in range(4):  # dp-aligned burst: no padding to defer
+                reqs.append(SimRequest(rid=rid, seq_len=256,
+                                       arrival=round(bt, 6),
+                                       sla=BURST_SLA_256))
+                rid += 1
+                bt += rnd.uniform(0.0001, 0.0004)
+            next_burst += rnd.uniform(0.08, 0.12)
+        reqs.append(SimRequest(rid=rid, seq_len=1024, arrival=round(t, 6),
+                               sla=BURST_SLA_1024))
+        rid += 1
+    reqs.sort(key=lambda r: (r.arrival, r.rid))
+    return reqs
+
+
+def diurnal_stream(n: int = 80, seed: int = 11,
+                   period: float = 0.4) -> list[SimRequest]:
+    """Sinusoidally-modulated arrival rate (a compressed day): gaps are
+    exponential with mean 1/λ(t), λ(t) = base·(1 + 0.85·sin(2πt/T)),
+    mixed resolutions cycling — peak-hour pressure then troughs."""
+    import math
+
+    rnd = random.Random(seed)
+    reqs, t = [], 0.0
+    base_rate = 120.0  # arrivals/s at the mean
+    for i in range(n):
+        lam = base_rate * (1.0 + 0.85 * math.sin(2 * math.pi * t / period))
+        t += rnd.expovariate(max(lam, 1e-3))
+        seq = SEQS[(i * 5 + i // 4) % 3]
+        reqs.append(SimRequest(rid=i, seq_len=seq, arrival=round(t, 6),
+                               sla=SLAS[seq]))
+    return reqs
+
+
+SCENARIOS = {"bursty": bursty_stream, "diurnal": diurnal_stream}
+
+
+def save_trace(reqs: list[SimRequest], path: pathlib.Path) -> None:
+    path.write_text(json.dumps({
+        "requests": [{"rid": r.rid, "seq_len": r.seq_len,
+                      "arrival": r.arrival, "sla": r.sla} for r in reqs],
+    }, indent=1))
+
+
+def load_trace(path: pathlib.Path) -> list[SimRequest]:
+    payload = json.loads(pathlib.Path(path).read_text())
+    return [SimRequest(rid=d["rid"], seq_len=d["seq_len"],
+                       arrival=d["arrival"], sla=d.get("sla"))
+            for d in payload["requests"]]
 
 
 def _plan_cache(static: bool) -> PlanCache:
@@ -137,15 +224,21 @@ class GreedyPolicy:
 
 
 class BucketedPolicy:
-    """The sched subsystem behind the same simulation interface."""
+    """The sched subsystem behind the same simulation interface.
 
-    def __init__(self):
+    ``forecast=True`` attaches an ``ArrivalForecaster`` so padded-batch
+    deferral runs under the §10 explicit horizon; the preemption hooks
+    (``waiting_candidates`` / ``requeue``) are what the step-granular
+    simulation drives when given a ``PreemptionPolicy``."""
+
+    def __init__(self, forecast: bool = False):
         self.plan_cache = _plan_cache(static=False)
+        self.cfg = SchedConfig(max_batch=MAX_BATCH, dp=DP,
+                               starvation_age=STARVATION_AGE,
+                               default_slack=10.0, defer_slack=0.02)
         self.sched = RequestScheduler(
-            self.plan_cache,
-            SchedConfig(max_batch=MAX_BATCH, dp=DP,
-                        starvation_age=STARVATION_AGE, default_slack=10.0,
-                        defer_slack=0.02))
+            self.plan_cache, self.cfg,
+            forecaster=ArrivalForecaster() if forecast else None)
 
     def submit(self, req, now: float) -> None:
         self.sched.submit(req, now)
@@ -157,19 +250,38 @@ class BucketedPolicy:
     def next(self, now: float, flush: bool):
         return self.sched.next_batch(now, flush=flush)
 
+    # -- control-loop hooks (sched/control.py) --------------------------
+    def waiting_candidates(self, now: float):
+        return self.sched.waiting_candidates(now)
 
-def simulate(policy, reqs: list[SimRequest]) -> dict:
-    """Discrete-event run of one serving pipeline: batches execute
-    sequentially for their comm-model-predicted duration; arrivals land
-    while earlier batches run."""
+    def requeue(self, reqs, pad_rows: int = 0) -> None:
+        self.sched.requeue(reqs, pad_rows)
+
+    @property
+    def starvation_age(self) -> float:
+        return self.cfg.starvation_age
+
+
+def simulate(policy, reqs: list[SimRequest],
+             preempt: PreemptionPolicy | None = None) -> dict:
+    """Step-granular discrete-event run of one serving pipeline: batches
+    execute as NUM_STEPS sampler steps of their comm-model-predicted
+    duration; arrivals land *between steps*, where (with ``preempt``
+    set) the §10 preemption policy may park the running batch — exactly
+    the engine's control point, on simulated time."""
     i, t = 0, 0.0
     stats = {"pad_tokens": 0, "real_tokens": 0, "batches": 0,
-             "max_wait": 0.0, "sla_miss": 0, "served": 0,
-             "max_batch_s": 0.0}
-    while True:
-        while i < len(reqs) and reqs[i].arrival <= t + 1e-9:
+             "max_wait": 0.0, "sla_miss": 0, "sla_met": 0, "sla_total": 0,
+             "served": 0, "max_batch_s": 0.0, "preemptions": 0}
+
+    def deliver(upto: float) -> None:
+        nonlocal i
+        while i < len(reqs) and reqs[i].arrival <= upto + 1e-9:
             policy.submit(reqs[i], reqs[i].arrival)
             i += 1
+
+    while True:
+        deliver(t)
         if not policy.pending:
             if i >= len(reqs):
                 break
@@ -179,19 +291,44 @@ def simulate(policy, reqs: list[SimRequest]) -> dict:
         if adm is None:  # deferred for better packing; wait for arrivals
             t = reqs[i].arrival
             continue
+        start = t
         dur = adm.plan.t_batch
-        finish = t + dur
+        t_step = dur / NUM_STEPS
+        parked = False
+        for s in range(NUM_STEPS):
+            t += t_step
+            deliver(t)
+            if preempt is not None and s < NUM_STEPS - 1:
+                victim = preempt.should_preempt(
+                    policy.waiting_candidates(t),
+                    remaining_steps=NUM_STEPS - 1 - s, t_step=t_step,
+                    running_age=t - min(r.submitted for r in adm.requests),
+                    starvation_age=policy.starvation_age,
+                    running_seq=adm.seq_len, running_k=len(adm.requests),
+                    max_batch=MAX_BATCH)
+                if victim is not None:
+                    policy.requeue(adm.requests, adm.pad_rows)
+                    stats["preemptions"] += 1
+                    parked = True
+                    break
+        if parked:
+            continue
         for r in adm.requests:
-            stats["max_wait"] = max(stats["max_wait"], t - r.submitted)
-            if r.sla is not None and finish - r.submitted > r.sla:
-                stats["sla_miss"] += 1
+            stats["max_wait"] = max(stats["max_wait"], start - r.submitted)
+            if r.sla is not None:
+                stats["sla_total"] += 1
+                if t - r.submitted > r.sla:
+                    stats["sla_miss"] += 1
+                else:
+                    stats["sla_met"] += 1
         stats["pad_tokens"] += adm.pad_rows * adm.seq_len
         stats["real_tokens"] += len(adm.requests) * adm.seq_len
         stats["served"] += len(adm.requests)
         stats["batches"] += 1
         stats["max_batch_s"] = max(stats["max_batch_s"], dur)
-        t = finish
     stats["makespan_s"] = t
+    stats["sla_met_frac"] = (stats["sla_met"] / stats["sla_total"]
+                             if stats["sla_total"] else 1.0)
     return stats
 
 
@@ -205,6 +342,33 @@ def _compare() -> tuple[dict, dict, BucketedPolicy]:
     bucketed = simulate(bucketed_policy,
                         [dataclasses.replace(r) for r in reqs])
     return greedy, bucketed, bucketed_policy
+
+
+def compare_preemption(reqs: list[SimRequest],
+                       forecast: bool = True) -> tuple[dict, dict]:
+    """The ISSUE-5 comparison: the PR-3 non-preemptive scheduler vs the
+    §10 control loop (preemption + forecaster) over the SAME stream."""
+    plain = simulate(BucketedPolicy(),
+                     [dataclasses.replace(r) for r in reqs])
+    preemptive = simulate(BucketedPolicy(forecast=forecast),
+                          [dataclasses.replace(r) for r in reqs],
+                          preempt=PreemptionPolicy())
+    return plain, preemptive
+
+
+@functools.lru_cache(maxsize=1)
+def _compare_bursty() -> tuple[dict, dict]:
+    return compare_preemption(bursty_stream())
+
+
+def _policy_row(scenario: str, name: str, s: dict) -> str:
+    return row(
+        f"sched_sweep/N{N_MACHINES}M{M_PER_MACHINE}/{scenario}/{name}",
+        s["makespan_s"] * 1e6,
+        f"padded_tokens={s['pad_tokens']},batches={s['batches']},"
+        f"max_wait_s={s['max_wait']:.2f},sla_miss={s['sla_miss']},"
+        f"sla_met_frac={s['sla_met_frac']:.3f},"
+        f"preemptions={s['preemptions']}")
 
 
 def run() -> list[str]:
@@ -228,6 +392,9 @@ def run() -> list[str]:
             choice.t_step * 1e6,
             f"cfg={h.cfg},pp={h.pp},Pu={h.sp.p_ulysses},Pr={h.sp.p_ring},"
             f"patches={choice.num_patches}"))
+    plain, preemptive = _compare_bursty()
+    rows.append(_policy_row("bursty", "non-preemptive", plain))
+    rows.append(_policy_row("bursty", "preemptive", preemptive))
     return rows
 
 
@@ -268,6 +435,19 @@ def records() -> list[dict]:
                                     if k != "t_step"},
             "measured_step_us": None,
         })
+    plain, preemptive = _compare_bursty()
+    for name, s in (("non-preemptive", plain), ("preemptive", preemptive)):
+        out.append({
+            "name": f"sched_sweep/N{N_MACHINES}M{M_PER_MACHINE}"
+                    f"/bursty/{name}",
+            "policy": name,
+            "scenario": "bursty",
+            "n_machines": N_MACHINES,
+            "m_per_machine": M_PER_MACHINE,
+            "dp": DP,
+            "metrics": s,
+            "measured_step_us": None,
+        })
     return out
 
 
@@ -294,6 +474,45 @@ def _assert_analytic() -> list[str]:
                 f"{greedy['makespan_s']:.1f}s -> {bucketed['makespan_s']:.1f}s, "
                 f"max_wait {bucketed['max_wait']:.1f}s <= bound {bound:.1f}s")
     return msgs
+
+
+def _assert_preemption(tmpdir: pathlib.Path | None = None) -> list[str]:
+    """ISSUE-5 acceptance: on the seeded bursty stream the preemptive
+    control loop achieves a STRICTLY higher SLA-met fraction than the
+    PR-3 non-preemptive scheduler, every request is still served, the
+    starvation bound survives preemption, and a trace round-trips
+    through --emit-trace/--replay bit-for-bit."""
+    import tempfile
+
+    plain, preemptive = _compare_bursty()
+    assert preemptive["served"] == plain["served"] > 0, (
+        preemptive["served"], plain["served"])
+    assert preemptive["preemptions"] > 0, "bursty stream never preempted"
+    assert plain["preemptions"] == 0
+    assert preemptive["sla_met_frac"] > plain["sla_met_frac"], (
+        preemptive["sla_met_frac"], plain["sla_met_frac"])
+    # starvation bound with preemption: overdue batches are immune and
+    # served first, so a wait can exceed the bound only by batches that
+    # were already in flight (plus their restart)
+    bound = STARVATION_AGE + (len(SEQS) + 1) * preemptive["max_batch_s"]
+    assert preemptive["max_wait"] <= bound, (preemptive["max_wait"], bound)
+
+    # replay round-trip: a saved trace drives an identical simulation
+    reqs = bursty_stream()
+    with tempfile.TemporaryDirectory(dir=tmpdir) as td:
+        p = pathlib.Path(td) / "trace.json"
+        save_trace(reqs, p)
+        replayed = load_trace(p)
+    assert [(r.rid, r.seq_len, r.arrival, r.sla) for r in replayed] == \
+           [(r.rid, r.seq_len, r.arrival, r.sla) for r in reqs]
+    plain2, preemptive2 = compare_preemption(replayed)
+    assert (plain2, preemptive2) == (plain, preemptive), \
+        "trace replay diverged from the generating run"
+    return [f"preemption: bursty sla_met "
+            f"{plain['sla_met_frac']:.3f} -> {preemptive['sla_met_frac']:.3f} "
+            f"({preemptive['preemptions']} preemptions, "
+            f"max_wait {preemptive['max_wait']:.2f}s <= {bound:.2f}s), "
+            f"replay round-trip exact"]
 
 
 def _smoke_engine() -> list[str]:
@@ -356,12 +575,50 @@ def _smoke_engine() -> list[str]:
             f"{tot.padded_rows} padded rows"]
 
 
+def _replay_rows(reqs: list[SimRequest], label: str) -> list[str]:
+    greedy = simulate(GreedyPolicy(), [dataclasses.replace(r) for r in reqs])
+    plain, preemptive = compare_preemption(reqs)
+    return [_policy_row(label, "greedy", greedy),
+            _policy_row(label, "non-preemptive", plain),
+            _policy_row(label, "preemptive", preemptive)]
+
+
 def main(argv: list[str] | None = None) -> None:
-    args = list(sys.argv[1:] if argv is None else argv)
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the acceptance claims + engine e2e")
+    ap.add_argument("--replay", type=pathlib.Path, default=None,
+                    help="re-run the policies over a recorded trace.json")
+    ap.add_argument("--emit-trace", type=pathlib.Path, default=None,
+                    help="write the --scenario stream as a trace.json")
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS),
+                    default="bursty")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="generator seed (default: the scenario's)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+
+    if args.emit_trace is not None:
+        gen = SCENARIOS[args.scenario]
+        reqs = gen(seed=args.seed) if args.seed is not None else gen()
+        save_trace(reqs, args.emit_trace)
+        print(f"# wrote {len(reqs)} requests to {args.emit_trace}",
+              file=sys.stderr)
+        return
+
+    if args.replay is not None:
+        for line in _replay_rows(load_trace(args.replay),
+                                 f"replay[{args.replay.stem}]"):
+            print(line)
+        return
+
     for line in run():
         print(line)
-    if "--smoke" in args:
+    if args.smoke:
         for m in _assert_analytic():
+            print(f"# {m}", file=sys.stderr)
+        for m in _assert_preemption():
             print(f"# {m}", file=sys.stderr)
         for m in _smoke_engine():
             print(f"# {m}", file=sys.stderr)

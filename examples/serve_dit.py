@@ -6,6 +6,13 @@ plan cache, drift-triggered resync) -> batched flow-matching sampling
 with swift_torus SP composed with CFG parallelism and displaced patch
 pipelining -> latents -> toy VAE decode.
 
+Part two demonstrates the adaptive control loop (DESIGN.md §10) under a
+bursty arrival pattern: a burst of tight-SLA small requests lands while
+a long best-effort batch is mid-flight; the preemption policy parks the
+running batch between sampler steps (its requests keep their accrued
+age), the burst is served, the parked batch restarts, and the online
+calibrator refits the comm model from the measured step times.
+
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_dit.py
 """
@@ -25,9 +32,12 @@ from repro.core import PipelineConfig, SPConfig, plan_hybrid
 from repro.launch.mesh import make_hybrid_mesh
 from repro.models import get_model
 from repro.serving import (
+    CalibrationConfig,
+    ControlConfig,
     DiTRequest,
     DiTServer,
     DriftPolicy,
+    PreemptionPolicy,
     SamplerConfig,
     toy_vae_decode,
 )
@@ -57,7 +67,16 @@ def main():
                         num_steps=4, guidance_scale=5.0, cfg_parallel=True,
                         pipeline=PipelineConfig(pp=2, warmup_steps=1)),
                     max_batch=2, param_axes=axes,
-                    drift=DriftPolicy(threshold=0.1))
+                    drift=DriftPolicy(threshold=0.1),
+                    # the §10 control loop: step-level preemption, online
+                    # comm-model refit, forecast-bounded deferral (the
+                    # deferral horizon only binds dp-padded batches, so
+                    # on this dp=1 mesh the forecaster just tracks rates)
+                    control=ControlConfig(
+                        preemption=PreemptionPolicy(min_remaining_steps=1),
+                        calibration=CalibrationConfig(min_samples=4,
+                                                      refit_every=2),
+                        forecast=True))
 
     # a mixed-resolution queue with per-request SLAs: three "image" sizes;
     # the scheduler buckets by latent length, admits by deadline slack,
@@ -84,6 +103,39 @@ def main():
           f"{tot.batches} batches over {len(srv.plan_cache.plans)} bucket "
           f"shapes ({srv.plan_cache.traces} traces, "
           f"{srv.plan_cache.hits} step-cache hits)")
+
+    # -- part two: a bursty arrival mid-batch (DESIGN.md §10) -------------
+    # two long best-effort requests start a batch; after its first step a
+    # burst of tight-SLA small requests lands via the on_step hook — the
+    # preemption policy parks the long batch (remaining measured steps
+    # exceed the burst's slack), serves the burst, then restarts it
+    print("\n--- bursty arrivals: step-level preemption ---")
+    srv.submit(DiTRequest(rid=100, seq_len=256))
+    srv.submit(DiTRequest(rid=101, seq_len=256))
+    burst_sent = []
+
+    def burst(server, step):
+        if not burst_sent:
+            burst_sent.append(step)
+            for j in range(2):
+                server.submit(DiTRequest(rid=200 + j, seq_len=64, sla=0.15,
+                                         drift_threshold=0.1))
+
+    srv.on_step = burst
+    bursty = srv.serve()
+    srv.on_step = None
+    for r in sorted(bursty, key=lambda r: r.rid):
+        print(f"request {r.rid}: seq {r.latents.shape[0]}  "
+              f"latency {r.latency * 1e3:.1f} ms  sla_met={r.sla_met}  "
+              f"preemptions={r.preemptions}  "
+              f"steps {[f'{t * 1e3:.0f}ms' for t in r.step_times]}")
+    cal = srv.calibrator
+    print(f"\ncontrol loop: {srv.preemptions} batch preemptions "
+          f"({srv.scheduler.preempted} requests parked and requeued), "
+          f"{cal.refits} comm-model refits, {cal.recalibrations} "
+          f"recalibrations ({srv.plan_cache.invalidations} plan-score "
+          f"invalidations; compiled steps kept: "
+          f"{srv.plan_cache.traces} traces)")
 
 
 if __name__ == "__main__":

@@ -13,14 +13,10 @@ mfu) so the analytical model reproduces those measurements:
     python -m benchmarks.hybrid_sweep --calibration calibration.json
     python -m benchmarks.e2e_latency  --calibration calibration.json
 
-Method: damped Gauss-Newton on log-parameters with log-ratio residuals
-``log(pred/measured)`` (numpy only — no scipy in the container).  Log
-space keeps every parameter positive and makes the fit scale-free across
-the many orders of magnitude between bandwidths and hop latencies; the
-damping keeps parameters the records cannot identify (e.g. intra_bw when
-every record models intra traffic as overlapped, or hop latencies in
-bandwidth-bound configs) pinned near their nominal start instead of
-wandering.
+The solver itself lives in ``repro.core.calibration`` (damped
+Gauss-Newton on log-parameters with log-ratio residuals, numpy only) —
+shared with the serving engine's in-flight ``OnlineCalibrator``
+(DESIGN.md §10); this script is the offline record-file frontend.
 
 The regression test (tests/test_calibration.py) pins the fitted/nominal
 ratios on a checked-in fixture generated from a known ground-truth model.
@@ -28,24 +24,20 @@ ratios on a checked-in fixture generated from a known ground-truth model.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import math
 import pathlib
 import sys
 
-import numpy as np
-
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
+from repro.core import calibration  # noqa: E402
+from repro.core.calibration import FIT_PARAMS  # noqa: E402,F401  (re-export)
 from repro.core.comm_model import (  # noqa: E402
     LayerWorkload,
     NetworkModel,
     plan_step_latency,
 )
 from repro.core.planner import plan_hybrid  # noqa: E402
-
-FIT_PARAMS = ("intra_bw", "inter_bw", "intra_lat", "inter_lat", "mfu")
 
 
 def load_records(paths: list[pathlib.Path]) -> list[dict]:
@@ -83,52 +75,15 @@ def predict_us(rec: dict, net: NetworkModel) -> float:
     return pred["t_step"] * 1e6
 
 
-def _net_from_theta(theta: np.ndarray) -> NetworkModel:
-    return dataclasses.replace(
-        NetworkModel(), **{k: float(math.exp(v))
-                           for k, v in zip(FIT_PARAMS, theta)})
-
-
-def _residuals(theta: np.ndarray, recs: list[dict]) -> np.ndarray:
-    net = _net_from_theta(theta)
-    return np.array([
-        math.log(predict_us(r, net) / r["measured_step_us"]) for r in recs])
-
-
 def fit(recs: list[dict], *, iters: int = 40, damping: float = 1e-3,
         fd_eps: float = 1e-5) -> tuple[NetworkModel, dict]:
-    """Least-squares fit; returns (model, report).
-
-    Gauss-Newton with Levenberg damping; the Jacobian is finite-differenced
-    in log-parameter space (5 params x len(recs) residuals).
-    """
+    """Fit the shared solver to record dicts; returns (model, report
+    dict) — the report-as-dict form older callers and the calibration
+    JSON payload expect."""
     assert recs, "no records with measured_step_us — nothing to fit"
-    nominal = NetworkModel()
-    theta = np.array([math.log(getattr(nominal, k)) for k in FIT_PARAMS])
-    r = _residuals(theta, recs)
-    for _ in range(iters):
-        jac = np.empty((len(recs), len(theta)))
-        for j in range(len(theta)):
-            t2 = theta.copy()
-            t2[j] += fd_eps
-            jac[:, j] = (_residuals(t2, recs) - r) / fd_eps
-        a = np.vstack([jac, math.sqrt(damping) * np.eye(len(theta))])
-        b = np.concatenate([-r, np.zeros(len(theta))])
-        step, *_ = np.linalg.lstsq(a, b, rcond=None)
-        if not np.all(np.isfinite(step)):
-            break
-        theta = theta + step
-        r = _residuals(theta, recs)
-        if np.linalg.norm(step) < 1e-10:
-            break
-    net = _net_from_theta(theta)
-    report = {
-        "n_records": len(recs),
-        "rms_rel_error": float(math.sqrt(float(np.mean(r ** 2)))),
-        "ratio_vs_nominal": {
-            k: getattr(net, k) / getattr(nominal, k) for k in FIT_PARAMS},
-    }
-    return net, report
+    net, report = calibration.fit(recs, predict_us, iters=iters,
+                                  damping=damping, fd_eps=fd_eps)
+    return net, report.as_dict()
 
 
 def main(argv: list[str] | None = None) -> int:

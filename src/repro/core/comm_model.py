@@ -328,6 +328,23 @@ def plan_step_latency(
         num_steps=num_steps, comm_backend=cb)
 
 
+# NetworkModel fields the calibration fitter treats as free parameters
+# (core/calibration.py, scripts/calibrate_comm.py, sched/control.py's
+# OnlineCalibrator).  flops and bytes_per_elem are hardware constants;
+# step_issue_overhead is calibrated on-TPU (ROADMAP Pallas item), not from
+# step-latency records, which cannot separate it from the hop latencies.
+FIT_PARAMS = ("intra_bw", "inter_bw", "intra_lat", "inter_lat", "mfu")
+
+
+def fit_param_ratios(net: NetworkModel,
+                     ref: NetworkModel | None = None) -> dict[str, float]:
+    """Per-parameter ratio of ``net`` over ``ref`` (nominal by default) —
+    the drift measure the online recalibration loop thresholds on and the
+    quantity the calibration regression tests pin."""
+    ref = ref if ref is not None else NetworkModel()
+    return {k: getattr(net, k) / getattr(ref, k) for k in FIT_PARAMS}
+
+
 def network_model_from_dict(d: dict) -> NetworkModel:
     """NetworkModel with any subset of fields overridden; non-field keys
     (e.g. the fit report ``calibrate_comm.py`` attaches) are ignored."""

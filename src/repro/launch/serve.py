@@ -11,6 +11,12 @@ so the resolution bucketer and per-bucket plan cache are exercised;
 ``--sla`` attaches a deadline to every request and the admission policy
 scores buckets by deadline slack against the comm model's predicted
 batch latency.
+
+The adaptive control loop (DESIGN.md §10) is opt-in per feedback path:
+``--preempt`` lets an SLA-critical bucket park the running batch between
+sampler steps, ``--recalibrate`` refits the comm model from measured
+step times in-flight, ``--forecast`` bounds padded-batch deferral with
+the per-bucket arrival forecast.
 """
 from __future__ import annotations
 
@@ -23,7 +29,16 @@ import jax.numpy as jnp
 from ..configs import get_config, get_reduced
 from ..core import SPConfig
 from ..models import get_model
-from ..serving import ARRequest, ARServer, DiTRequest, DiTServer, SamplerConfig
+from ..serving import (
+    ARRequest,
+    ARServer,
+    CalibrationConfig,
+    ControlConfig,
+    DiTRequest,
+    DiTServer,
+    PreemptionPolicy,
+    SamplerConfig,
+)
 from .mesh import make_host_mesh, make_production_mesh
 
 
@@ -41,6 +56,16 @@ def main():
                     help="mixed-resolution queue (exercises the bucketer)")
     ap.add_argument("--sla", type=float, default=None,
                     help="deadline (s) attached to every DiT request")
+    ap.add_argument("--preempt", action="store_true",
+                    help="step-level preemption for SLA-critical buckets "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="refit the comm model from measured step times "
+                         "in-flight (DESIGN.md §10)")
+    ap.add_argument("--forecast", action="store_true",
+                    help="bound padded-batch deferral with the arrival "
+                         "forecaster (DESIGN.md §10; deferral applies to "
+                         "dp-padded batches, so this needs --data > 1)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -59,8 +84,13 @@ def main():
                   sp_axes=("model",), batch_axes=("data",))
 
     if cfg.family == "dit":
+        control = ControlConfig(
+            preemption=PreemptionPolicy() if args.preempt else None,
+            calibration=CalibrationConfig() if args.recalibrate else None,
+            forecast=args.forecast)
         srv = DiTServer(params, cfg, mesh, sp,
-                        sampler=SamplerConfig(num_steps=args.steps))
+                        sampler=SamplerConfig(num_steps=args.steps),
+                        control=control)
         lens = ([args.seq, args.seq // 2, args.seq * 2] if args.mixed
                 else [args.seq])
         for i in range(args.requests):
@@ -76,6 +106,13 @@ def main():
               f"({srv.plan_cache.traces} traces, {srv.plan_cache.hits} "
               f"step-cache hits), {tot.padded_rows} padded rows, "
               f"max wait {tot.max_wait * 1e3:.1f} ms")
+        if control.engaged:
+            cal = srv.calibrator
+            print(f"control: {srv.preemptions} preemptions "
+                  f"({srv.scheduler.preempted} requests requeued)"
+                  + (f", {cal.refits} refits / {cal.recalibrations} "
+                     f"recalibrations ({srv.plan_cache.invalidations} "
+                     f"plan-score invalidations)" if cal else ""))
     else:
         srv = ARServer(params, cfg, mesh, sp, batch_slots=4,
                        max_len=args.seq)

@@ -29,7 +29,7 @@ from ..configs.base import ModelConfig
 from ..core import SPConfig, plan_hybrid
 from ..core.comm_model import NetworkModel
 from ..models import ParallelContext, get_model, param_shardings
-from ..models.dit import COND_TOKENS
+from ..models.dit import COND_TOKENS, LATENT_CHANNELS
 from .sampler import (
     SamplerConfig,
     hybrid_sample_step,
@@ -37,12 +37,16 @@ from .sampler import (
     sample_step,
 )
 from .sched import (
+    ArrivalForecaster,
+    ControlConfig,
     DriftPolicy,
+    OnlineCalibrator,
     PlanCache,
     PlanChoice,
     RequestScheduler,
     SchedConfig,
     aged_priority,
+    steady_t_step,
 )
 
 
@@ -63,6 +67,10 @@ class DiTRequest:
     # per-request KV-staleness bound for the displaced pipeline; crossing
     # it triggers a resync step (None = the server DriftPolicy's default)
     drift_threshold: float | None = None
+    # times this request's batch was parked by the preemption policy
+    # (maintained by the engine; requeued requests keep their submitted
+    # stamp, so accrued starvation age survives a park)
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
@@ -79,6 +87,12 @@ class DiTResult:
     resyncs: int = 0
     # whether the request's deadline (submitted + sla) was met
     sla_met: bool = True
+    # per-step wall clocks of the FINAL (completing) run of this
+    # request's batch (empty unless the control loop measures steps) —
+    # step-granular latencies, not one aggregate over resyncs
+    step_times: list[float] = dataclasses.field(default_factory=list)
+    # times the request's batch was parked before completing
+    preemptions: int = 0
 
 
 class DiTServer:
@@ -108,13 +122,24 @@ class DiTServer:
                  max_batch: int = 4, param_axes=None,
                  sched: SchedConfig | None = None,
                  drift: DriftPolicy | None = None,
-                 net: NetworkModel | None = None):
+                 net: NetworkModel | None = None,
+                 control: ControlConfig | None = None):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "prefill")
         self.sampler = sampler
-        self._rng = jax.random.PRNGKey(0)
+        # noise is drawn per REQUEST (fold_in of the rid, see _noise), so
+        # a request's trajectory is independent of batch composition and
+        # admission order — a parked batch's restart and an unpreempted
+        # rerun of the same requests produce bitwise-identical latents
+        self._noise_key = jax.random.PRNGKey(0)
         self.drift = drift if drift is not None else DriftPolicy()
+        self.control = control if control is not None else ControlConfig()
+        # instrumentation hook: called as on_step(server, step_index)
+        # after every completed sampler step, before the preemption check
+        # (tests inject mid-batch arrivals through it)
+        self.on_step: Callable[[DiTServer, int], None] | None = None
+        self.preemptions = 0  # batches parked (not requests)
         if (sampler.pipelined and sp.pp_axis
                 and sp.pp_axis in mesh.axis_names and param_axes is not None):
             # stage partitioning: each pipe rank holds its n_layers/pp blocks
@@ -145,7 +170,14 @@ class DiTServer:
             num_steps=sampler.num_steps, guided=sampler.guided,
             guidance_branches=sampler.cfg_degree, dp=dp, net=net,
             candidates=[fixed], base_patches=pipe.patches if pipe else 0)
-        self.scheduler = RequestScheduler(self.plan_cache, self.sched_cfg)
+        forecaster = (ArrivalForecaster(self.control.forecast_alpha)
+                      if self.control.forecast else None)
+        self.scheduler = RequestScheduler(self.plan_cache, self.sched_cfg,
+                                          forecaster=forecaster)
+        self.preempt = self.control.preemption
+        self.calibrator = (OnlineCalibrator(self.plan_cache,
+                                            self.control.calibration)
+                           if self.control.calibration is not None else None)
 
     def submit(self, req: DiTRequest) -> None:
         self.scheduler.submit(req, time.time())
@@ -191,16 +223,81 @@ class DiTServer:
 
             return jax.jit(f)
 
-        return self.plan_cache.step_fn(batch, seq, build)
+        # the patch count is part of the compiled step's identity: after
+        # an online recalibration changes a bucket's plan choice, the new
+        # variant compiles lazily instead of reusing the stale trace
+        return self.plan_cache.step_fn(batch, seq, build,
+                                       variant=choice.num_patches)
 
     def _dp_degree(self) -> int:
         ba = self.ctx.sp.batch_axes or ()
         return math.prod(self.ctx.mesh.shape[a] for a in ba)
 
+    # salt folded into the noise key for dp padding rows (disjoint from
+    # request ids, so pad noise is deterministic but never collides)
+    _PAD_NOISE_SALT = 1 << 30
+
+    def _noise(self, batch: list[DiTRequest], b: int, t: int) -> jax.Array:
+        """Initial latent noise, drawn per ROW from a key that depends
+        only on the request's rid (pad rows: the row index) — batch
+        composition and admission order cannot change any request's
+        trajectory, which is what makes a preempted batch's restart
+        bitwise-equal to an unpreempted rerun (DESIGN.md §10)."""
+        keys = [jax.random.fold_in(self._noise_key,
+                                   batch[i].rid if i < len(batch)
+                                   else self._PAD_NOISE_SALT + i)
+                for i in range(b)]
+        return jnp.stack([
+            jax.random.normal(k, (t, LATENT_CHANNELS), self.cfg.dtype)
+            for k in keys])
+
+    def _park(self, adm) -> None:
+        """Preempt the running batch: requests return to the head of
+        their bucket with accrued age intact (admission accounting
+        reversed); the threaded KV state and partial latents are simply
+        dropped (sampler steps leave no other per-batch state — the
+        PipeFusion preemption-point argument)."""
+        for r in adm.requests:
+            r.preemptions += 1
+        self.scheduler.requeue(adm.requests, adm.pad_rows)
+        self.preemptions += 1
+
+    def _should_park(self, adm, step: int, num_steps: int,
+                     step_times: list[float]) -> bool:
+        """The between-steps preemption check (sched/control.py): the
+        running batch's remaining time is estimated from its OWN measured
+        steps (``sched.control.steady_t_step`` — trace-robust median,
+        shared with the calibrator), so the decision self-corrects on
+        hardware the analytical model mispredicts.  At the very first
+        check the single (possibly trace-paying) sample is used
+        deliberately: over-estimating the unknown remaining time errs
+        toward the SLA-critical waiting side."""
+        if self.preempt is None or step >= num_steps - 1:
+            return False
+        now = time.time()
+        measured = steady_t_step(step_times)
+        t_est = measured if measured is not None else adm.plan.t_step
+        oldest = min(r.submitted for r in adm.requests)
+        victim = self.preempt.should_preempt(
+            self.scheduler.waiting_candidates(now),
+            remaining_steps=num_steps - 1 - step, t_step=t_est,
+            running_age=now - oldest,
+            starvation_age=self.sched_cfg.starvation_age,
+            running_seq=adm.seq_len, running_k=len(adm.requests),
+            max_batch=self.sched_cfg.max_batch)
+        return victim is not None
+
     def run_once(self, flush: bool = True) -> list[DiTResult]:
         """Serve one scheduler admission.  ``flush=False`` lets the
         admission policy defer partial (padded) batches in the hope of
-        more arrivals; the default serves whatever scores best now."""
+        more arrivals; the default serves whatever scores best now.
+
+        With the control loop engaged (``ControlConfig.preemption`` or
+        ``.calibration``) the step loop is measured: each sampler step is
+        blocked on and wall-clocked individually, the preemption policy
+        runs between steps (a parked batch returns [] and its requests
+        re-enter the queue), and completed batches feed the online
+        calibrator.  Without it, the loop is the PR-3 sync-free one."""
         adm = self.scheduler.next_batch(time.time(), flush=flush)
         if adm is None:
             return []
@@ -215,12 +312,27 @@ class DiTServer:
              else jnp.zeros((COND_TOKENS, d), self.cfg.dtype))
             for i in range(b)
         ])
-        self._rng, sub = jax.random.split(self._rng)
-        x = jax.random.normal(sub, (b, t, 64), self.cfg.dtype)
+        x = self._noise(batch, b, t)
         fn = self._step_fn(b, t, adm.plan)
         dt = 1.0 / sc.num_steps
+        measure = self.control.engaged
+        step_times: list[float] = []
         drift_vals = []
         resyncs = 0
+
+        def tick(i: int, outputs, t0: float) -> bool:
+            """Post-step control point: stamp the step's wall clock, run
+            the instrumentation hook, then the preemption check."""
+            if measure:
+                jax.block_until_ready(outputs)
+                step_times.append(time.time() - t0)
+            if self.on_step is not None:
+                self.on_step(self, i)
+            if self._should_park(adm, i, sc.num_steps, step_times):
+                self._park(adm)
+                return True
+            return False
+
         if sc.pipelined:
             warm_fn, displaced_fn = fn
             pipe = sc.pipeline
@@ -236,6 +348,7 @@ class DiTServer:
                 else:
                     warm = pipe.warm_step(i)
                 f = warm_fn if warm else displaced_fn
+                t0 = time.time()
                 x, state, m = f(self.params, x, cond,
                                 jnp.float32(1.0 - i * dt), state)
                 per = m["kv_drift_per_request"]
@@ -245,11 +358,18 @@ class DiTServer:
                     # host: one device sync per step, only when a bound is
                     # actually configured (DESIGN.md §9)
                     last_drift = [float(per[j]) for j in range(n_real)]
+                if tick(i, (x, state), t0):
+                    return []
         else:
             for i in range(sc.num_steps):
+                t0 = time.time()
                 x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
+                if tick(i, x, t0):
+                    return []
         x.block_until_ready()
         now = time.time()
+        if self.calibrator is not None and step_times:
+            self.calibrator.observe(adm.plan, b, t, step_times)
         # materialise after the timed region; row i is request i's own
         # trajectory (padded rows are never handed to a request)
         drifts = [[float(v[i]) for v in drift_vals] for i in range(n_real)]
@@ -258,13 +378,29 @@ class DiTServer:
                       kv_drift=drifts[i] if drift_vals else [],
                       resyncs=resyncs,
                       sla_met=(r.sla is None
-                               or now <= r.submitted + r.sla))
+                               or now <= r.submitted + r.sla),
+                      step_times=list(step_times),
+                      preemptions=r.preemptions)
             for i, r in enumerate(batch)
         ]
 
     def serve(self) -> list[DiTResult]:
+        """Drain the queue.  With the arrival forecaster engaged
+        (``ControlConfig.forecast``), each round first offers the
+        admission policy a non-flush pick so the §10 deferral horizon is
+        consulted — a padded candidate whose missing rows are forecast
+        to arrive within its slack keeps waiting for them (only
+        meaningful with dp > 1: the deferral applies to dp-padded
+        batches).  A round that admits nothing and parks nothing falls
+        back to a flush pick, so the drain always terminates."""
         out = []
         while self.scheduler.pending:
+            if self.scheduler.forecaster is not None:
+                pre = self.preemptions
+                got = self.run_once(flush=False)
+                if got or self.preemptions != pre:
+                    out.extend(got)
+                    continue
             out.extend(self.run_once(flush=True))
         return out
 

@@ -28,6 +28,7 @@ Beyond the paper, the sampler composes two extra parallel axes with SP
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -226,7 +227,8 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
            sc: SamplerConfig = SamplerConfig(),
            step_fn=None, metrics: list[dict] | None = None,
            drift_policy=None,
-           drift_thresholds: list[float | None] | None = None) -> jax.Array:
+           drift_thresholds: list[float | None] | None = None,
+           interrupt=None) -> jax.Array:
     """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS].
 
     With ``sc.pipeline`` set, the loop threads the displaced-pipeline KV
@@ -237,20 +239,48 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
     runs warm exactly when the previous step's per-request ``kv_drift``
     crossed the request's bound (``drift_thresholds``, one entry per batch
     row, None entries fall back to the policy default) — reading the drift
-    on the host costs one device sync per step.  Passing a ``metrics``
-    list collects one per-step dict (``step``, ``warm``, ``kv_drift``) —
-    the surfaced staleness trajectory.  A custom ``step_fn`` bypasses all
-    of that.
+    on the host costs one device sync per step.  A custom ``step_fn``
+    bypasses all of that.
+
+    The loop is **step-granular** (DESIGN.md §10):
+
+      * Passing a ``metrics`` list collects one per-step dict (``step``,
+        ``warm``, ``kv_drift``, ``t_step_s``).  ``t_step_s`` is that
+        step's own wall clock — the loop blocks on the step's outputs
+        before stamping it, so resync (warm) steps and displaced steps
+        are timed individually instead of aggregating into one number.
+        This is what the online calibrator and the preemption policy
+        consume; without ``metrics`` no per-step sync is paid.
+      * ``interrupt``, called as ``interrupt(step_index)`` after every
+        completed step, stops the loop early when it returns True and
+        the current latents are returned as-is — the hook an embedding
+        engine uses to park a batch between steps.
     """
     x = jax.random.normal(key, (batch, seq_len, LATENT_CHANNELS), cfg.dtype)
     dt = 1.0 / sc.num_steps
+    timed = metrics is not None
+
+    def stamp(i: int, outputs, extra: dict, t0: float) -> None:
+        if not timed:
+            return
+        jax.block_until_ready(outputs)
+        metrics.append({"step": i, "t_step_s": time.time() - t0, **extra})
+
     if step_fn is not None:
         for i in range(sc.num_steps):
+            t0 = time.time()
             x = step_fn(x, cond, 1.0 - i * dt)
+            stamp(i, x, {}, t0)
+            if interrupt is not None and interrupt(i):
+                return x
         return x
     if not sc.pipelined:
         for i in range(sc.num_steps):
+            t0 = time.time()
             x = sample_step(params, cfg, ctx, x, cond, 1.0 - i * dt, dt, sc)
+            stamp(i, x, {}, t0)
+            if interrupt is not None and interrupt(i):
+                return x
         return x
     thresholds = drift_thresholds or [None] * batch
     use_drift = drift_policy is not None and drift_policy.engaged(thresholds)
@@ -261,19 +291,26 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
             warm = drift_policy.warm(sc.pipeline, i, last_drift, thresholds)
         else:
             warm = sc.pipeline.warm_step(i)
+        t0 = time.time()
         x, state, m = hybrid_sample_step(params, cfg, ctx, x, cond,
                                          1.0 - i * dt, dt, sc, state,
                                          warm=warm)
         if use_drift:
             per = m["kv_drift_per_request"]
             last_drift = [float(per[j]) for j in range(batch)]
-        if metrics is not None:
-            metrics.append({
-                "step": i, "warm": warm,
+        if timed:
+            # materialise the drift floats only when metrics are asked
+            # for — otherwise the loop stays free of per-step host syncs
+            # (the PR-3 contract: the sync is paid only when a drift
+            # bound or the metrics list is configured)
+            stamp(i, (x, state), {
+                "warm": warm,
                 "kv_drift": float(m["kv_drift"]),
                 "kv_drift_per_request": [
                     float(d) for d in m["kv_drift_per_request"]],
-            })
+            }, t0)
+        if interrupt is not None and interrupt(i):
+            return x
     return x
 
 

@@ -1,4 +1,4 @@
-"""SLA-aware request scheduling for DiT serving (DESIGN.md §9).
+"""SLA-aware request scheduling for DiT serving (DESIGN.md §9/§10).
 
 Resolution-bucketed continuous batching: a bucketer groups requests by
 latent length, an admission policy scores (bucket, batch-size) candidates
@@ -6,6 +6,13 @@ with the analytical comm model against per-request SLAs, a plan cache
 selects and memoizes one ``plan_hybrid`` execution plan (and compiled
 step) per bucket shape, and a drift policy turns the displaced pipeline's
 ``kv_drift`` signal into threshold-triggered resyncs.
+
+The adaptive control loop (DESIGN.md §10) closes three feedback paths on
+top: an ``ArrivalForecaster`` bounds padded-batch deferral with an
+explicit per-bucket horizon, a ``PreemptionPolicy`` can park a running
+batch between sampler steps for an SLA-critical bucket, and an
+``OnlineCalibrator`` refits the comm model from measured step times,
+invalidating plan-cache scores when the fit drifts.
 """
 from .admission import AdmissionPolicy, Candidate, SchedConfig
 from .bucketer import (
@@ -16,23 +23,40 @@ from .bucketer import (
     deadline_of,
     padded_rows,
 )
+from .control import (
+    CalibrationConfig,
+    ControlConfig,
+    OnlineCalibrator,
+    PreemptionPolicy,
+    StepObservation,
+    steady_t_step,
+)
 from .drift import DriftPolicy
+from .forecast import ArrivalForecaster, BucketRate
 from .plan_cache import PlanCache, PlanChoice
 from .scheduler import Admission, RequestScheduler
 
 __all__ = [
     "Admission",
     "AdmissionPolicy",
+    "ArrivalForecaster",
     "Bucket",
     "Bucketer",
+    "BucketRate",
     "BucketStats",
+    "CalibrationConfig",
     "Candidate",
+    "ControlConfig",
     "DriftPolicy",
+    "OnlineCalibrator",
     "PlanCache",
     "PlanChoice",
+    "PreemptionPolicy",
     "RequestScheduler",
     "SchedConfig",
+    "StepObservation",
     "aged_priority",
     "deadline_of",
     "padded_rows",
+    "steady_t_step",
 ]

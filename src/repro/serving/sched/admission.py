@@ -20,13 +20,19 @@ Two hard rules sit above the scoring:
   * **deferral** — a candidate that needs padding rows may wait for more
     arrivals while its slack exceeds ``defer_slack`` (unless ``flush`` is
     set, i.e. no more arrivals are coming); this is what converts greedy
-    fragment batches into dp-aligned ones.
+    fragment batches into dp-aligned ones.  With an ``ArrivalForecaster``
+    attached (DESIGN.md §10) the wait is no longer open-ended: the
+    candidate defers only while the forecast time for the missing rows to
+    arrive — EWMA interarrival gap plus a variance safety margin — fits
+    inside its slack.  A bucket whose arrivals have dried up is served
+    padded immediately instead of stalling until ``flush``.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from .bucketer import Bucket, aged_priority, padded_rows
+from .forecast import ArrivalForecaster
 from .plan_cache import PlanCache, PlanChoice
 
 
@@ -38,6 +44,10 @@ class SchedConfig:
     aging_rate: float = 1.0  # s of score credit per s of queue age
     default_slack: float = 60.0  # assumed slack for requests without SLA
     defer_slack: float = 1.0  # padded candidates wait while slack > this
+    # std-dev multiplier on the forecast fill time: higher inflates the
+    # predicted wait under jittery arrivals, so padded candidates give up
+    # deferring (and serve padded) sooner; 0 trusts the mean gap alone
+    forecast_safety: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,9 +63,29 @@ class Candidate:
 
 
 class AdmissionPolicy:
-    def __init__(self, cfg: SchedConfig, plan_cache: PlanCache):
+    def __init__(self, cfg: SchedConfig, plan_cache: PlanCache,
+                 forecaster: ArrivalForecaster | None = None):
         self.cfg = cfg
         self.plans = plan_cache
+        self.forecaster = forecaster
+
+    def _worth_deferring(self, c: Candidate, now: float) -> bool:
+        """Whether a padded candidate should wait for more arrivals.
+
+        Without a forecaster: the PR-3 rule (wait while slack allows).
+        With one: wait only while the predicted time for the missing rows
+        to arrive also fits inside the slack — the explicit deferral
+        horizon (DESIGN.md §10)."""
+        if c.min_slack <= self.cfg.defer_slack:
+            return False  # too urgent to wait, forecast or not
+        if self.forecaster is None:
+            return True
+        fill = self.forecaster.expected_fill_time(
+            c.bucket.seq_len, c.pad_rows, now,
+            safety=self.cfg.forecast_safety)
+        if fill is None:
+            return True  # no rate estimate yet: keep the PR-3 behavior
+        return fill <= c.min_slack - self.cfg.defer_slack
 
     def _candidate(self, b: Bucket, k: int, now: float) -> Candidate:
         c = self.cfg
@@ -92,9 +122,10 @@ class AdmissionPolicy:
             return max(overdue, key=lambda x: (x.age, x.k))
         if not flush:
             eligible = [x for x in cands
-                        if x.pad_rows == 0 or x.min_slack <= c.defer_slack]
+                        if x.pad_rows == 0
+                        or not self._worth_deferring(x, now)]
             if not eligible:
-                return None  # every option would pad and none is urgent
+                return None  # every padded option is worth waiting on
             cands = eligible
         # lowest score = most urgent; ties to the older, then longer bucket
         return min(cands, key=lambda x: (x.score, -x.age, -x.bucket.seq_len))

@@ -85,6 +85,26 @@ class Bucket:
                 slack = min(slack, d - now - batch_latency)
         return slack
 
+    def push_front(self, reqs: list, pad_rows: int = 0) -> None:
+        """Return preempted requests to the head of the queue in their
+        original order, WITHOUT touching ``submitted`` — a parked request
+        keeps its accrued starvation age (preemption invariant (a),
+        tests/test_sched_control.py).
+
+        The admission accounting ``pop`` recorded is reversed (the batch
+        did not complete; its eventual re-admission re-accounts it), so
+        ``BucketStats`` never double-counts a parked batch.  ``max_wait``
+        is deliberately NOT reversed: the wait observed at the first
+        admission really happened."""
+        for r in reversed(reqs):
+            self.q.appendleft(r)
+        st = self.stats
+        st.batches -= 1
+        st.admitted -= len(reqs)
+        st.padded_rows -= pad_rows
+        st.padded_token_work -= pad_rows * self.seq_len
+        st.real_token_work -= len(reqs) * self.seq_len
+
     def pop(self, k: int, now: float, dp: int) -> list:
         """Admit the ``k`` oldest requests and account the padding the
         admission implies."""
@@ -113,6 +133,20 @@ class Bucketer:
         if b is None:
             b = self.buckets[req.seq_len] = Bucket(req.seq_len)
         b.q.append(req)
+
+    def requeue(self, reqs: list, pad_rows: int = 0) -> None:
+        """Re-enqueue a preempted batch at the front of its bucket(s),
+        oldest first, with accrued ages intact and its admission
+        accounting reversed (batches never mix buckets, so the padding
+        belongs to the single bucket involved)."""
+        by_seq: dict[int, list] = {}
+        for r in reqs:
+            by_seq.setdefault(r.seq_len, []).append(r)
+        for seq, rs in by_seq.items():
+            b = self.buckets.get(seq)
+            if b is None:
+                b = self.buckets[seq] = Bucket(seq)
+            b.push_front(rs, pad_rows if len(by_seq) == 1 else 0)
 
     @property
     def pending(self) -> int:

@@ -74,6 +74,12 @@ class PlanCache:
         self._steps: dict[tuple[int, int], Any] = {}
         self.hits = 0
         self.misses = 0
+        # plan-score cache counters, separate from the compiled-step ones:
+        # a recalibration invalidates SCORES (plan_misses grow again) but
+        # never compiled steps (hits/misses/traces untouched)
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.invalidations = 0  # recalibrate() calls that cleared scores
 
     # -- plan selection ---------------------------------------------------
     def _patch_options(self, hplan: HybridPlan, seq: int) -> list[int]:
@@ -93,7 +99,9 @@ class PlanCache:
         key = (batch_rows, seq)
         cached = self.plans.get(key)
         if cached is not None:
+            self.plan_hits += 1
             return cached
+        self.plan_misses += 1
         wl = LayerWorkload(batch=max(batch_rows // self.dp, 1), seq=seq,
                            heads=self.heads, head_dim=self.head_dim)
         best: PlanChoice | None = None
@@ -112,11 +120,28 @@ class PlanCache:
         self.plans[key] = best
         return best
 
+    def recalibrate(self, net: NetworkModel) -> None:
+        """Swap in a refitted NetworkModel and invalidate every cached
+        plan SCORE (DESIGN.md §10): the next ``select`` per bucket shape
+        re-scores candidates under the new model.  Compiled steps are NOT
+        touched — a latency re-estimate never costs a retrace; only the
+        patch-count/plan choice and the admission policy's predicted
+        latencies move."""
+        self.net = net
+        self.plans.clear()
+        self.invalidations += 1
+
     # -- compiled-step memoization ---------------------------------------
-    def step_fn(self, batch_rows: int, seq: int, build: Callable[[], Any]):
+    def step_fn(self, batch_rows: int, seq: int, build: Callable[[], Any],
+                variant: Any = None):
         """Return the compiled step artifact for a shape, building (and
-        counting a trace) only on first use."""
-        key = (batch_rows, seq)
+        counting a trace) only on first use.  ``variant`` distinguishes
+        compile-relevant plan attributes beyond the shape (the engine
+        passes the selected patch count): after a ``recalibrate`` changes
+        a bucket's plan choice, the new variant compiles lazily while the
+        old one stays cached."""
+        key = (batch_rows, seq) if variant is None else (batch_rows, seq,
+                                                         variant)
         if key in self._steps:
             self.hits += 1
         else:

@@ -1,5 +1,6 @@
-"""Request scheduler facade (DESIGN.md §9): bucketer → admission → plan
-cache, behind the two calls an engine needs (``submit`` / ``next_batch``).
+"""Request scheduler facade (DESIGN.md §9/§10): bucketer → forecaster →
+admission → plan cache, behind the calls an engine needs (``submit`` /
+``next_batch`` / ``requeue``).
 
 The scheduler is pure host-side bookkeeping — no jax, no device state —
 so the same object drives the real ``DiTServer`` and the analytical
@@ -9,8 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from .admission import AdmissionPolicy, SchedConfig
+from .admission import AdmissionPolicy, Candidate, SchedConfig
 from .bucketer import Bucketer, BucketStats
+from .forecast import ArrivalForecaster
 from .plan_cache import PlanCache, PlanChoice
 
 
@@ -30,18 +32,36 @@ class Admission:
 
 class RequestScheduler:
     def __init__(self, plan_cache: PlanCache,
-                 cfg: SchedConfig = SchedConfig()):
+                 cfg: SchedConfig = SchedConfig(),
+                 forecaster: ArrivalForecaster | None = None):
         self.cfg = cfg
         self.plan_cache = plan_cache
         self.bucketer = Bucketer()
-        self.policy = AdmissionPolicy(cfg, plan_cache)
+        self.forecaster = forecaster
+        self.policy = AdmissionPolicy(cfg, plan_cache, forecaster)
         self.admissions: int = 0
+        self.preempted: int = 0  # requests returned via requeue()
 
     def submit(self, req, now: float) -> None:
         """Enqueue a request, stamping its submission time (the basis for
-        SLA deadlines and starvation ages)."""
+        SLA deadlines and starvation ages) and feeding the bucket's
+        arrival-rate estimate."""
         req.submitted = now
+        if self.forecaster is not None:
+            self.forecaster.observe(req.seq_len, now)
         self.bucketer.add(req)
+
+    def requeue(self, reqs: list, pad_rows: int = 0) -> None:
+        """Park a preempted batch: its requests return to the HEAD of
+        their bucket in original order with ``submitted`` untouched, so
+        accrued starvation age survives the preemption (DESIGN.md §10),
+        and the admission's bucket accounting is reversed (``pad_rows``
+        from the Admission) so ``totals()`` counts only completed
+        batches.  No arrival is recorded — a parked request is not new
+        traffic.  ``admissions`` is NOT decremented: it counts
+        ``next_batch`` decisions, parked or not."""
+        self.bucketer.requeue(reqs, pad_rows)
+        self.preempted += len(reqs)
 
     @property
     def pending(self) -> int:
@@ -58,6 +78,12 @@ class RequestScheduler:
         self.admissions += 1
         return Admission(cand.bucket.seq_len, reqs, cand.batch_rows,
                          cand.pad_rows, cand.plan, cand.min_slack, cand.age)
+
+    def waiting_candidates(self, now: float) -> list[Candidate]:
+        """Scored candidates over the currently queued buckets WITHOUT
+        dequeuing — what the preemption policy inspects between sampler
+        steps (sched/control.py)."""
+        return self.policy.candidates(self.bucketer.nonempty(), now)
 
     def totals(self) -> BucketStats:
         """Aggregated padding-waste / starvation-age accounting."""
