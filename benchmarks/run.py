@@ -13,6 +13,14 @@ per-config records pairing each configuration with its comm-model
 prediction breakdown.  These files are the calibration corpus the ROADMAP
 "fit NetworkModel to BENCH_*.json" item consumes: the JSON keeps the full
 (config -> prediction) mapping that the flat CSV derives away.
+
+``--metrics out.jsonl`` additionally routes every parsed row through the
+serving metrics sink (DESIGN.md §11): one ``bench.us`` gauge per row
+(tagged module/name) and per-module ``bench.rows``/``bench.errors``
+counters, schema-versioned like a serve trace — so bench trajectories
+and serving telemetry are one stream format.  ``--only SUBSTR`` filters
+modules by substring (CI's metrics-schema gate runs a single fast
+module).
 """
 from __future__ import annotations
 
@@ -59,7 +67,17 @@ def main(argv: list[str] | None = None) -> None:
                     help="directory for BENCH_*.json trajectory records")
     ap.add_argument("--no-json", action="store_true",
                     help="CSV to stdout only; write no BENCH_*.json")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only modules whose name contains SUBSTR")
+    ap.add_argument("--metrics", default=None, metavar="OUT.JSONL",
+                    help="stream each row through the serving metrics "
+                         "sink as schema-versioned JSONL (DESIGN.md §11)")
     args = ap.parse_args(argv)
+
+    from repro.serving.metrics import JsonlTracker, Tracker
+
+    tracker = (JsonlTracker(args.metrics) if args.metrics is not None
+               else Tracker())
 
     from . import (
         ablation,
@@ -84,22 +102,39 @@ def main(argv: list[str] | None = None) -> None:
         "hybrid_sweep (beyond-paper, DESIGN.md §7)": hybrid_sweep,
         "sched_sweep (beyond-paper, DESIGN.md §9)": sched_sweep,
     }
+    if args.only is not None:
+        modules = {t: m for t, m in modules.items() if args.only in t}
+        if not modules:
+            raise SystemExit(f"--only {args.only!r} matched no module")
+
     print("name,us_per_call,derived")
     ok = True
     for title, mod in modules.items():
+        mod_name = mod.__name__.split(".")[-1]
         print(f"# --- {title} ---", file=sys.stderr)
         try:
             rows = list(mod.run())
             for line in rows:
                 print(line)
+                parsed = parse_row(line)
+                if parsed["us"] is not None:
+                    tracker.log("bench.us", parsed["us"],
+                                tags={"module": mod_name,
+                                      "name": parsed["name"]})
+            tracker.count("bench.rows", len(rows),
+                          tags={"module": mod_name})
             if not args.no_json:
                 recs = getattr(mod, "records", None)
-                path = write_bench_json(args.out_dir, mod.__name__.split(".")[-1],
+                path = write_bench_json(args.out_dir, mod_name,
                                         rows, recs() if recs else None)
                 print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # keep the harness running, flag failure
             print(f"{title},NaN,ERROR:{type(e).__name__}:{e}")
+            tracker.count("bench.errors", tags={"module": mod_name})
             ok = False
+    tracker.close()
+    if args.metrics is not None:
+        print(f"# wrote {args.metrics}", file=sys.stderr)
     if not ok:
         raise SystemExit(1)
 

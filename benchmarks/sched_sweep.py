@@ -32,6 +32,9 @@ acceptance claims, the ISSUE-5 claim (the preemptive control loop
 achieves a STRICTLY higher SLA-met fraction than the non-preemptive
 scheduler on the seeded bursty stream), a replay round-trip, and drives
 a real tiny ``DiTServer`` end-to-end on 8 simulated CPU devices.
+``--metrics out.jsonl`` streams the preemptive simulation's ``sim.*``
+trajectory through the serving metrics sink (DESIGN.md §11) — the same
+schema-versioned JSONL format a real ``--metrics`` serve emits.
 """
 from __future__ import annotations
 
@@ -48,10 +51,12 @@ from repro.core import plan_hybrid
 from repro.core.comm_model import NetworkModel
 from repro.serving.sched import (
     ArrivalForecaster,
+    JsonlTracker,
     PreemptionPolicy,
     RequestScheduler,
     SchedConfig,
     PlanCache,
+    Tracker,
     padded_rows,
 )
 
@@ -263,12 +268,19 @@ class BucketedPolicy:
 
 
 def simulate(policy, reqs: list[SimRequest],
-             preempt: PreemptionPolicy | None = None) -> dict:
+             preempt: PreemptionPolicy | None = None,
+             tracker: Tracker | None = None) -> dict:
     """Step-granular discrete-event run of one serving pipeline: batches
     execute as NUM_STEPS sampler steps of their comm-model-predicted
     duration; arrivals land *between steps*, where (with ``preempt``
     set) the §10 preemption policy may park the running batch — exactly
-    the engine's control point, on simulated time."""
+    the engine's control point, on simulated time.
+
+    ``tracker`` publishes the trajectory through the serving metrics
+    sink (DESIGN.md §11): ``sim.*`` counters/gauges in the same
+    schema-versioned stream format the real engine emits, so simulated
+    and measured serving telemetry are directly comparable."""
+    trk = tracker if tracker is not None else Tracker()
     i, t = 0, 0.0
     stats = {"pad_tokens": 0, "real_tokens": 0, "batches": 0,
              "max_wait": 0.0, "sla_miss": 0, "sla_met": 0, "sla_total": 0,
@@ -309,6 +321,7 @@ def simulate(policy, reqs: list[SimRequest],
                 if victim is not None:
                     policy.requeue(adm.requests, adm.pad_rows)
                     stats["preemptions"] += 1
+                    trk.count("sim.preemptions", tags={"seq": adm.seq_len})
                     parked = True
                     break
         if parked:
@@ -319,14 +332,24 @@ def simulate(policy, reqs: list[SimRequest],
                 stats["sla_total"] += 1
                 if t - r.submitted > r.sla:
                     stats["sla_miss"] += 1
+                    trk.count("sim.sla_miss", tags={"seq": adm.seq_len})
                 else:
                     stats["sla_met"] += 1
+                    trk.count("sim.sla_met", tags={"seq": adm.seq_len})
         stats["pad_tokens"] += adm.pad_rows * adm.seq_len
         stats["real_tokens"] += len(adm.requests) * adm.seq_len
         stats["served"] += len(adm.requests)
         stats["batches"] += 1
         stats["max_batch_s"] = max(stats["max_batch_s"], dur)
+        trk.count("sim.batches", tags={"seq": adm.seq_len})
+        trk.count("sim.served", len(adm.requests), tags={"seq": adm.seq_len})
+        if adm.pad_rows:
+            trk.count("sim.pad_tokens", adm.pad_rows * adm.seq_len,
+                      tags={"seq": adm.seq_len})
+        trk.log("sim.batch_s", dur, step=stats["batches"],
+                tags={"seq": adm.seq_len, "rows": adm.batch_rows})
     stats["makespan_s"] = t
+    trk.log("sim.makespan_s", t)
     stats["sla_met_frac"] = (stats["sla_met"] / stats["sla_total"]
                              if stats["sla_total"] else 1.0)
     return stats
@@ -597,7 +620,24 @@ def main(argv: list[str] | None = None) -> None:
                     default="bursty")
     ap.add_argument("--seed", type=int, default=None,
                     help="generator seed (default: the scenario's)")
+    ap.add_argument("--metrics", type=pathlib.Path, default=None,
+                    metavar="OUT.JSONL",
+                    help="stream the --scenario preemptive simulation's "
+                         "sim.* trajectory through the serving metrics "
+                         "sink (DESIGN.md §11)")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+
+    if args.metrics is not None:
+        gen = SCENARIOS[args.scenario]
+        reqs = gen(seed=args.seed) if args.seed is not None else gen()
+        with JsonlTracker(args.metrics) as trk:
+            stats = simulate(BucketedPolicy(forecast=True),
+                             [dataclasses.replace(r) for r in reqs],
+                             preempt=PreemptionPolicy(), tracker=trk)
+        print(f"# wrote {args.metrics} "
+              f"(sla_met_frac={stats['sla_met_frac']:.3f}, "
+              f"{stats['preemptions']} preemptions)", file=sys.stderr)
+        return
 
     if args.emit_trace is not None:
         gen = SCENARIOS[args.scenario]

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Validate metrics/bench artifacts against their schemas (CI gate).
+
+Two artifact families share the serving observability surface
+(DESIGN.md §11):
+
+  * ``*.jsonl`` — metrics traces (``metrics.v1``): one record per line,
+    checked with ``repro.serving.metrics.validate_record`` (the same
+    checker the unit tests pin), plus the stream-level invariants the
+    sinks guarantee — ``seq`` is the dense 0..n-1 total order, and every
+    counter series is monotone (records carry cumulative totals).
+  * ``BENCH_*.json`` — benchmark trajectory records (``bench.v1``,
+    benchmarks/run.py): the envelope and row/record structure
+    ``scripts/calibrate_comm.py`` consumes.
+
+Usage:  python scripts/check_metrics_schema.py FILE [FILE...]
+Exit 0 = every file conforms; violations are printed per file:line.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.serving.metrics import SCHEMA_VERSION, validate_record  # noqa: E402
+
+BENCH_SCHEMA = "bench.v1"
+
+
+def check_metrics_jsonl(path: pathlib.Path) -> list[str]:
+    errs: list[str] = []
+    counters: dict[tuple, float] = {}
+    n = 0
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            d = json.loads(line)
+        except json.JSONDecodeError as e:
+            errs.append(f"{path}:{i}: not JSON ({e})")
+            continue
+        msgs = validate_record(d)
+        if msgs:
+            errs.extend(f"{path}:{i}: {m}" for m in msgs)
+            continue
+        if d.get("seq") != n:
+            errs.append(f"{path}:{i}: seq {d.get('seq')} != {n} "
+                        f"(stream must be the dense record order)")
+        n += 1
+        if d.get("kind") == "counter":
+            key = (d["name"], tuple(sorted((d.get("tags") or {}).items())))
+            prev = counters.get(key)
+            if prev is not None and d["value"] < prev:
+                errs.append(f"{path}:{i}: counter {d['name']} decreased "
+                            f"({prev} -> {d['value']})")
+            counters[key] = d["value"]
+    if n == 0:
+        errs.append(f"{path}: empty trace (no records)")
+    return errs
+
+
+def check_bench_json(path: pathlib.Path) -> list[str]:
+    errs: list[str] = []
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path}: not JSON ({e})"]
+    if data.get("schema") != BENCH_SCHEMA:
+        errs.append(f"{path}: schema {data.get('schema')!r} != "
+                    f"{BENCH_SCHEMA!r}")
+    for field in ("module", "generated_at", "rows", "records"):
+        if field not in data:
+            errs.append(f"{path}: missing field {field!r}")
+    for j, row in enumerate(data.get("rows", [])):
+        if set(row) != {"name", "us", "derived"}:
+            errs.append(f"{path}: rows[{j}] fields {sorted(row)} != "
+                        f"['derived', 'name', 'us']")
+        elif row["us"] is not None and not isinstance(row["us"], (int, float)):
+            errs.append(f"{path}: rows[{j}].us {row['us']!r} not a number")
+    for j, rec in enumerate(data.get("records", [])):
+        if "name" not in rec:
+            errs.append(f"{path}: records[{j}] has no name")
+    return errs
+
+
+def check(path: pathlib.Path) -> list[str]:
+    if not path.exists():
+        return [f"{path}: no such file"]
+    if path.suffix == ".jsonl":
+        return check_metrics_jsonl(path)
+    if path.suffix == ".json":
+        return check_bench_json(path)
+    return [f"{path}: unknown artifact type (want .jsonl or BENCH_*.json)"]
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    errors: list[str] = []
+    for arg in argv:
+        p = pathlib.Path(arg)
+        errs = check(p)
+        errors += errs
+        kind = "metrics" if p.suffix == ".jsonl" else "bench"
+        print(f"{'FAIL' if errs else 'ok':>4}  {p} ({kind})")
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} schema violation(s) "
+              f"(metrics schema: {SCHEMA_VERSION})")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

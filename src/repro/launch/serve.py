@@ -17,6 +17,13 @@ The adaptive control loop (DESIGN.md §10) is opt-in per feedback path:
 sampler steps, ``--recalibrate`` refits the comm model from measured
 step times in-flight, ``--forecast`` bounds padded-batch deferral with
 the per-bucket arrival forecast.
+
+``--metrics out.jsonl`` (DESIGN.md §11) attaches a ``JsonlTracker`` to
+the engine: every plan-cache hit/miss, admission, per-step wall clock,
+preemption, resync and recalibration streams to ``out.jsonl`` as
+schema-versioned records, and an end-of-run aggregate table is printed.
+A persistent sink opts the step loop into per-step timing even without
+``--preempt``/``--recalibrate``.
 """
 from __future__ import annotations
 
@@ -36,8 +43,11 @@ from ..serving import (
     ControlConfig,
     DiTRequest,
     DiTServer,
+    JsonlTracker,
     PreemptionPolicy,
+    SCHEMA_VERSION,
     SamplerConfig,
+    Tracker,
 )
 from .mesh import make_host_mesh, make_production_mesh
 
@@ -66,6 +76,10 @@ def main():
                     help="bound padded-batch deferral with the arrival "
                          "forecaster (DESIGN.md §10; deferral applies to "
                          "dp-padded batches, so this needs --data > 1)")
+    ap.add_argument("--metrics", default=None, metavar="OUT.JSONL",
+                    help="stream schema-versioned metrics records to this "
+                         "JSONL file and print an end-of-run aggregate "
+                         "table (DESIGN.md §11)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -83,6 +97,8 @@ def main():
     sp = SPConfig(strategy=args.strategy if sp_degree > 1 else "full",
                   sp_axes=("model",), batch_axes=("data",))
 
+    tracker = (JsonlTracker(args.metrics) if args.metrics is not None
+               else Tracker())
     if cfg.family == "dit":
         control = ControlConfig(
             preemption=PreemptionPolicy() if args.preempt else None,
@@ -90,7 +106,7 @@ def main():
             forecast=args.forecast)
         srv = DiTServer(params, cfg, mesh, sp,
                         sampler=SamplerConfig(num_steps=args.steps),
-                        control=control)
+                        control=control, tracker=tracker)
         lens = ([args.seq, args.seq // 2, args.seq * 2] if args.mixed
                 else [args.seq])
         for i in range(args.requests):
@@ -115,13 +131,17 @@ def main():
                      f"plan-score invalidations)" if cal else ""))
     else:
         srv = ARServer(params, cfg, mesh, sp, batch_slots=4,
-                       max_len=args.seq)
+                       max_len=args.seq, tracker=tracker)
         for i in range(args.requests):
             srv.submit(ARRequest(rid=i,
                                  prompt=jnp.arange(1, 4 + i, dtype=jnp.int32),
                                  max_new_tokens=8))
         for rid, toks in sorted(srv.serve().items()):
             print(f"request {rid}: -> {toks}")
+    if args.metrics is not None:
+        tracker.close()
+        print(f"\nmetrics: wrote {tracker.path} (schema {SCHEMA_VERSION})")
+        print(tracker.format_summary())
 
 
 if __name__ == "__main__":

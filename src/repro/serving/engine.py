@@ -30,6 +30,7 @@ from ..core import SPConfig, plan_hybrid
 from ..core.comm_model import NetworkModel
 from ..models import ParallelContext, get_model, param_shardings
 from ..models.dit import COND_TOKENS, LATENT_CHANNELS
+from .metrics import Tracker
 from .sampler import (
     SamplerConfig,
     hybrid_sample_step,
@@ -123,11 +124,19 @@ class DiTServer:
                  sched: SchedConfig | None = None,
                  drift: DriftPolicy | None = None,
                  net: NetworkModel | None = None,
-                 control: ControlConfig | None = None):
+                 control: ControlConfig | None = None,
+                 tracker: Tracker | None = None):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "prefill")
         self.sampler = sampler
+        # one metrics sink for the whole engine (DESIGN.md §11): the plan
+        # cache, scheduler, calibrator and step loop all publish here.
+        # The default aggregate-only Tracker keeps the legacy counter
+        # attributes readable at zero retention cost; pass a JsonlTracker
+        # or RecordingTracker to capture the full stream (which also
+        # opts the step loop into per-step wall clocks, see run_once).
+        self.tracker = tracker if tracker is not None else Tracker()
         # noise is drawn per REQUEST (fold_in of the rid, see _noise), so
         # a request's trajectory is independent of batch composition and
         # admission order — a parked batch's restart and an unpreempted
@@ -139,7 +148,6 @@ class DiTServer:
         # after every completed sampler step, before the preemption check
         # (tests inject mid-batch arrivals through it)
         self.on_step: Callable[[DiTServer, int], None] | None = None
-        self.preemptions = 0  # batches parked (not requests)
         if (sampler.pipelined and sp.pp_axis
                 and sp.pp_axis in mesh.axis_names and param_axes is not None):
             # stage partitioning: each pipe rank holds its n_layers/pp blocks
@@ -169,15 +177,25 @@ class DiTServer:
             kv_heads=cfg.n_kv_heads, n_layers=cfg.n_layers,
             num_steps=sampler.num_steps, guided=sampler.guided,
             guidance_branches=sampler.cfg_degree, dp=dp, net=net,
-            candidates=[fixed], base_patches=pipe.patches if pipe else 0)
-        forecaster = (ArrivalForecaster(self.control.forecast_alpha)
+            candidates=[fixed], base_patches=pipe.patches if pipe else 0,
+            tracker=self.tracker)
+        forecaster = (ArrivalForecaster(self.control.forecast_alpha,
+                                        tracker=self.tracker)
                       if self.control.forecast else None)
         self.scheduler = RequestScheduler(self.plan_cache, self.sched_cfg,
-                                          forecaster=forecaster)
+                                          forecaster=forecaster,
+                                          tracker=self.tracker)
         self.preempt = self.control.preemption
         self.calibrator = (OnlineCalibrator(self.plan_cache,
-                                            self.control.calibration)
+                                            self.control.calibration,
+                                            tracker=self.tracker)
                            if self.control.calibration is not None else None)
+
+    # -- tracker-backed counters (legacy attribute surface) ---------------
+    @property
+    def preemptions(self) -> int:
+        """Batches parked (not requests)."""
+        return int(self.tracker.counter("engine.preemptions"))
 
     def submit(self, req: DiTRequest) -> None:
         self.scheduler.submit(req, time.time())
@@ -251,7 +269,7 @@ class DiTServer:
             jax.random.normal(k, (t, LATENT_CHANNELS), self.cfg.dtype)
             for k in keys])
 
-    def _park(self, adm) -> None:
+    def _park(self, adm, adm_id: int, step: int) -> None:
         """Preempt the running batch: requests return to the head of
         their bucket with accrued age intact (admission accounting
         reversed); the threaded KV state and partial latents are simply
@@ -260,7 +278,14 @@ class DiTServer:
         for r in adm.requests:
             r.preemptions += 1
         self.scheduler.requeue(adm.requests, adm.pad_rows)
-        self.preemptions += 1
+        self.tracker.count("engine.preemptions")
+        # park event: which admission, at which step, whose requests —
+        # the restart shows up later as those rids completing under a new
+        # admission id with preemptions > 0
+        self.tracker.log("engine.park", float(step), step=step,
+                         tags={"adm": adm_id, "seq": adm.seq_len,
+                               "rids": ",".join(str(r.rid)
+                                                for r in adm.requests)})
 
     def _should_park(self, adm, step: int, num_steps: int,
                      step_times: list[float]) -> bool:
@@ -301,6 +326,10 @@ class DiTServer:
         adm = self.scheduler.next_batch(time.time(), flush=flush)
         if adm is None:
             return []
+        # admission ordinal: the tag that stitches one batch's step
+        # series, park events and request completions together in the
+        # metrics stream (DESIGN.md §11)
+        adm_id = self.scheduler.admissions
         batch = adm.requests
         n_real = len(batch)
         b = adm.batch_rows  # n_real + dp padding rows (dropped at the end)
@@ -315,7 +344,11 @@ class DiTServer:
         x = self._noise(batch, b, t)
         fn = self._step_fn(b, t, adm.plan)
         dt = 1.0 / sc.num_steps
-        measure = self.control.engaged
+        # a persistent sink (JSONL / recording) opts into the per-step
+        # series even without the control loop: the wall-clock sync is
+        # the price of a trace worth shipping
+        measure = self.control.engaged or self.tracker.persistent
+        step_tags = {"adm": adm_id, "seq": t, "rows": b}
         step_times: list[float] = []
         drift_vals = []
         resyncs = 0
@@ -325,11 +358,14 @@ class DiTServer:
             the instrumentation hook, then the preemption check."""
             if measure:
                 jax.block_until_ready(outputs)
-                step_times.append(time.time() - t0)
+                t_step = time.time() - t0
+                step_times.append(t_step)
+                self.tracker.log("engine.t_step_s", t_step, step=i,
+                                 tags=step_tags)
             if self.on_step is not None:
                 self.on_step(self, i)
             if self._should_park(adm, i, sc.num_steps, step_times):
-                self._park(adm)
+                self._park(adm, adm_id, i)
                 return True
             return False
 
@@ -342,9 +378,12 @@ class DiTServer:
             last_drift: list[float] | None = None
             for i in range(sc.num_steps):
                 if use_drift:
-                    warm = self.drift.warm(pipe, i, last_drift, thresholds)
+                    warm = self.drift.warm(pipe, i, last_drift, thresholds,
+                                           tracker=self.tracker)
                     if warm and i >= pipe.warmup_steps:
                         resyncs += 1
+                        self.tracker.count("engine.resyncs",
+                                           tags={"seq": t})
                 else:
                     warm = pipe.warm_step(i)
                 f = warm_fn if warm else displaced_fn
@@ -373,7 +412,7 @@ class DiTServer:
         # materialise after the timed region; row i is request i's own
         # trajectory (padded rows are never handed to a request)
         drifts = [[float(v[i]) for v in drift_vals] for i in range(n_real)]
-        return [
+        results = [
             DiTResult(r.rid, x[i], now - r.submitted, sc.num_steps,
                       kv_drift=drifts[i] if drift_vals else [],
                       resyncs=resyncs,
@@ -383,6 +422,29 @@ class DiTServer:
                       preemptions=r.preemptions)
             for i, r in enumerate(batch)
         ]
+        # completion telemetry — emitted outside the timed region.  The
+        # kv_drift series is logged here (not mid-loop) so the stream
+        # carries it without adding any per-step host sync.
+        tr = self.tracker
+        tr.log("engine.batch_done", float(n_real),
+               tags={"adm": adm_id, "seq": t, "rows": b})
+        if drift_vals and n_real:
+            for s in range(len(drift_vals)):
+                mean = sum(drifts[i][s] for i in range(n_real)) / n_real
+                tr.log("engine.kv_drift", mean, step=s,
+                       tags={"adm": adm_id, "seq": t})
+        for r, req in zip(results, batch):
+            tr.count("engine.completed", tags={"seq": t})
+            if r.preemptions:
+                tr.count("engine.restarted_requests")
+            tr.log("engine.request_done", r.latency,
+                   tags={"adm": adm_id, "rid": r.rid, "seq": t,
+                         "preemptions": r.preemptions,
+                         "sla_met": r.sla_met})
+            if req.sla is not None:
+                tr.count("engine.sla_met" if r.sla_met
+                         else "engine.sla_miss", tags={"seq": t})
+        return results
 
     def serve(self) -> list[DiTResult]:
         """Drain the queue.  With the arrival forecaster engaged
@@ -444,7 +506,8 @@ class ARServer:
 
     def __init__(self, params, cfg: ModelConfig, mesh, sp: SPConfig,
                  batch_slots: int = 4, max_len: int = 256,
-                 cache_dtype=jnp.float32, aging_rate: float = 0.1):
+                 cache_dtype=jnp.float32, aging_rate: float = 0.1,
+                 tracker: Tracker | None = None):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "decode")
@@ -456,6 +519,9 @@ class ARServer:
         self.queue: deque[ARRequest] = deque()
         self.results: dict[int, list[int]] = {}
         self._ticks = 0
+        # metrics sink (DESIGN.md §11): slot admission / completion
+        # counters plus the queue-wait series, same schema as DiTServer
+        self.tracker = tracker if tracker is not None else Tracker()
 
         def step(params, caches, tokens, cur_index):
             batch = {"tokens": tokens}
@@ -468,6 +534,7 @@ class ARServer:
     def submit(self, req: ARRequest) -> None:
         req.submitted = self._ticks
         self.queue.append(req)
+        self.tracker.count("ar.submitted")
 
     def _take_next(self) -> ARRequest:
         """Pop the waiting request with the highest aged priority (stable:
@@ -485,6 +552,10 @@ class ARServer:
                 s.req = self._take_next()
                 s.pos = 0
                 s.generated = []
+                self.tracker.count("ar.admitted")
+                self.tracker.log("ar.queue_wait_ticks",
+                                 float(self._ticks - s.req.submitted),
+                                 tags={"rid": s.req.rid})
 
     def tick(self) -> None:
         """Advance every active slot one position.
@@ -497,6 +568,7 @@ class ARServer:
         active = [s for s in self.slots if s.req is not None]
         if not active:
             return
+        self.tracker.count("ar.ticks")
         pos = active[0].pos
         tokens = []
         for s in self.slots:
@@ -518,6 +590,9 @@ class ARServer:
             if (len(s.generated) >= s.req.max_new_tokens
                     or s.pos >= self.max_len - 1):
                 self.results[s.req.rid] = list(s.generated)
+                self.tracker.count("ar.completed")
+                self.tracker.log("ar.request_done", float(len(s.generated)),
+                                 tags={"rid": s.req.rid})
                 s.req = None
 
     def serve(self, max_ticks: int = 10_000) -> dict[int, list[int]]:

@@ -228,7 +228,7 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
            step_fn=None, metrics: list[dict] | None = None,
            drift_policy=None,
            drift_thresholds: list[float | None] | None = None,
-           interrupt=None) -> jax.Array:
+           interrupt=None, tracker=None) -> jax.Array:
     """Full sampling loop; returns final latents [B, T, LATENT_CHANNELS].
 
     With ``sc.pipeline`` set, the loop threads the displaced-pipeline KV
@@ -255,16 +255,30 @@ def sample(params, cfg: ModelConfig, ctx: ParallelContext, *,
         completed step, stops the loop early when it returns True and
         the current latents are returned as-is — the hook an embedding
         engine uses to park a batch between steps.
+      * ``tracker`` (serving.metrics, DESIGN.md §11) publishes the same
+        per-step series (``sampler.t_step_s``, ``sampler.kv_drift``) to
+        a metrics sink.  A *persistent* sink (JSONL / recording) turns
+        timing on by itself; an aggregate-only sink only collects what
+        the ``metrics`` list already paid for.
     """
     x = jax.random.normal(key, (batch, seq_len, LATENT_CHANNELS), cfg.dtype)
     dt = 1.0 / sc.num_steps
-    timed = metrics is not None
+    timed = metrics is not None or (tracker is not None
+                                    and tracker.persistent)
 
     def stamp(i: int, outputs, extra: dict, t0: float) -> None:
         if not timed:
             return
         jax.block_until_ready(outputs)
-        metrics.append({"step": i, "t_step_s": time.time() - t0, **extra})
+        t_step = time.time() - t0
+        if metrics is not None:
+            metrics.append({"step": i, "t_step_s": t_step, **extra})
+        if tracker is not None:
+            tracker.log("sampler.t_step_s", t_step, step=i,
+                        tags={"warm": extra["warm"]}
+                        if "warm" in extra else None)
+            if "kv_drift" in extra:
+                tracker.log("sampler.kv_drift", extra["kv_drift"], step=i)
 
     if step_fn is not None:
         for i in range(sc.num_steps):

@@ -35,6 +35,14 @@ from .drift import DriftPolicy
 from .forecast import ArrivalForecaster, BucketRate
 from .plan_cache import PlanCache, PlanChoice
 from .scheduler import Admission, RequestScheduler
+from ..metrics import (
+    SCHEMA_VERSION,
+    JsonlTracker,
+    NullTracker,
+    Record,
+    RecordingTracker,
+    Tracker,
+)
 
 __all__ = [
     "Admission",
@@ -48,13 +56,19 @@ __all__ = [
     "Candidate",
     "ControlConfig",
     "DriftPolicy",
+    "JsonlTracker",
+    "NullTracker",
     "OnlineCalibrator",
     "PlanCache",
     "PlanChoice",
     "PreemptionPolicy",
+    "Record",
+    "RecordingTracker",
     "RequestScheduler",
+    "SCHEMA_VERSION",
     "SchedConfig",
     "StepObservation",
+    "Tracker",
     "aged_priority",
     "deadline_of",
     "padded_rows",

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..metrics import Tracker
 from .bucketer import Bucket, aged_priority, padded_rows
 from .forecast import ArrivalForecaster
 from .plan_cache import PlanCache, PlanChoice
@@ -64,10 +65,12 @@ class Candidate:
 
 class AdmissionPolicy:
     def __init__(self, cfg: SchedConfig, plan_cache: PlanCache,
-                 forecaster: ArrivalForecaster | None = None):
+                 forecaster: ArrivalForecaster | None = None,
+                 tracker: Tracker | None = None):
         self.cfg = cfg
         self.plans = plan_cache
         self.forecaster = forecaster
+        self.tracker = tracker if tracker is not None else plan_cache.tracker
 
     def _worth_deferring(self, c: Candidate, now: float) -> bool:
         """Whether a padded candidate should wait for more arrivals.
@@ -119,13 +122,18 @@ class AdmissionPolicy:
         overdue = [x for x in cands if x.age >= c.starvation_age]
         if overdue:
             # starvation bound: most overdue first; bigger batch breaks ties
-            return max(overdue, key=lambda x: (x.age, x.k))
+            best = max(overdue, key=lambda x: (x.age, x.k))
+            self.tracker.count("sched.overdue_admissions",
+                               tags={"seq": best.bucket.seq_len})
+            return best
         if not flush:
             eligible = [x for x in cands
                         if x.pad_rows == 0
                         or not self._worth_deferring(x, now)]
             if not eligible:
-                return None  # every padded option is worth waiting on
+                # every padded option is worth waiting on
+                self.tracker.count("sched.deferrals")
+                return None
             cands = eligible
         # lowest score = most urgent; ties to the older, then longer bucket
         return min(cands, key=lambda x: (x.score, -x.age, -x.bucket.seq_len))

@@ -42,6 +42,7 @@ from ...core.comm_model import (
     fit_param_ratios,
     plan_step_latency,
 )
+from ..metrics import Tracker
 from .admission import Candidate
 from .plan_cache import PlanCache, PlanChoice
 
@@ -155,15 +156,28 @@ class OnlineCalibrator:
     engine's own measured per-step wall clocks (DESIGN.md §10)."""
 
     def __init__(self, plan_cache: PlanCache,
-                 cfg: CalibrationConfig = CalibrationConfig()):
+                 cfg: CalibrationConfig = CalibrationConfig(),
+                 tracker: Tracker | None = None):
         self.cfg = cfg
         self.plans = plan_cache
         self.net = plan_cache.net  # latest fit (pushed to plans on drift)
         self.obs: list[StepObservation] = []
         self._since_refit = 0
-        self.refits = 0
-        self.recalibrations = 0  # refits that crossed the drift threshold
         self.last_ratios: dict[str, float] = {}
+        # metrics sink (DESIGN.md §11): refit/recalibration counters plus
+        # the per-parameter drift-ratio trajectory; shares the plan
+        # cache's sink unless given its own
+        self.tracker = tracker if tracker is not None else plan_cache.tracker
+
+    # -- tracker-backed counters (legacy attribute surface) ---------------
+    @property
+    def refits(self) -> int:
+        return int(self.tracker.counter("calibration.refits"))
+
+    @property
+    def recalibrations(self) -> int:
+        """Refits that crossed the drift threshold."""
+        return int(self.tracker.counter("calibration.recalibrations"))
 
     def _predict_us(self, o: StepObservation, net: NetworkModel) -> float:
         pc = self.plans
@@ -195,6 +209,8 @@ class OnlineCalibrator:
         if len(self.obs) > self.cfg.window:
             del self.obs[:len(self.obs) - self.cfg.window]
         self._since_refit += 1
+        self.tracker.log("calibration.measured_step_us", t * 1e6,
+                         tags={"rows": batch_rows, "seq": seq})
         return self._maybe_refit()
 
     def _maybe_refit(self) -> bool:
@@ -205,13 +221,16 @@ class OnlineCalibrator:
         self.net, _report = calibration.fit(
             self.obs, self._predict_us, start=self.net, iters=c.iters,
             damping=c.damping)
-        self.refits += 1
+        refit_no = int(self.tracker.count("calibration.refits"))
         self.last_ratios = fit_param_ratios(self.net, self.plans.net)
+        for param, r in self.last_ratios.items():
+            self.tracker.log("calibration.drift_ratio", r, step=refit_no,
+                             tags={"param": param})
         drifted = any(r > c.drift_ratio or r < 1.0 / c.drift_ratio
                       for r in self.last_ratios.values())
         if drifted:
             self.plans.recalibrate(self.net)
-            self.recalibrations += 1
+            self.tracker.count("calibration.recalibrations")
         return drifted
 
 

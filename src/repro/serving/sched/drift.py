@@ -21,6 +21,7 @@ import dataclasses
 from typing import Sequence
 
 from ...core.pipefusion import PipelineConfig
+from ..metrics import Tracker
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,15 +39,25 @@ class DriftPolicy:
 
     def warm(self, pipe: PipelineConfig, step: int,
              last_drift: Sequence[float] | None,
-             thresholds: Sequence[float | None]) -> bool:
+             thresholds: Sequence[float | None],
+             tracker: Tracker | None = None) -> bool:
         """Decide step ``step`` given the previous step's per-request
-        drift (None = previous step was warm or this is the first)."""
+        drift (None = previous step was warm or this is the first).
+
+        With a ``tracker`` (DESIGN.md §11) the threshold crossing that
+        forces a resync is published as a ``drift.trigger`` gauge (the
+        offending request's drift value, tagged with its batch row and
+        the bound it crossed) — the trace shows WHY a warm step was
+        scheduled, not just that one happened."""
         if step < pipe.warmup_steps:
             return True
         if last_drift is None:
             return False
-        for d, t in zip(last_drift, thresholds):
+        for j, (d, t) in enumerate(zip(last_drift, thresholds)):
             bound = t if t is not None else self.threshold
             if bound is not None and d > bound:
+                if tracker is not None:
+                    tracker.log("drift.trigger", d, step=step,
+                                tags={"row": j, "bound": bound})
                 return True
         return False

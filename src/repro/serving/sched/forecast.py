@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from ..metrics import Tracker
+
 
 @dataclasses.dataclass
 class BucketRate:
@@ -51,10 +53,15 @@ class ArrivalForecaster:
     buckets carry a wide predictive interval and steady ones a tight one.
     """
 
-    def __init__(self, alpha: float = 0.25):
+    def __init__(self, alpha: float = 0.25,
+                 tracker: Tracker | None = None):
         assert 0.0 < alpha <= 1.0, alpha
         self.alpha = alpha
         self.buckets: dict[int, BucketRate] = {}
+        # metrics sink (DESIGN.md §11): the per-bucket rate estimate is
+        # published on every update so a trace shows the forecast the
+        # deferral horizon actually consulted
+        self.tracker = tracker if tracker is not None else Tracker()
 
     def observe(self, seq_len: int, now: float) -> None:
         """Record one arrival (called on every submit)."""
@@ -72,6 +79,8 @@ class ArrivalForecaster:
                 b.var_gap + self.alpha * delta * delta)
         b.last_arrival = now
         b.n += 1
+        self.tracker.log("forecast.mean_gap_s", b.mean_gap,
+                         tags={"seq": seq_len})
 
     def rate(self, seq_len: int) -> float:
         b = self.buckets.get(seq_len)

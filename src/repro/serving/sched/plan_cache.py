@@ -21,6 +21,7 @@ from typing import Any, Callable, NamedTuple
 
 from ...core.comm_model import LayerWorkload, NetworkModel, plan_step_latency
 from ...core.planner import HybridPlan, candidate_hybrid_plans
+from ..metrics import Tracker
 
 
 class PlanChoice(NamedTuple):
@@ -42,7 +43,8 @@ class PlanCache:
                  candidates: list[HybridPlan] | None = None,
                  base_patches: int = 0,
                  patch_multipliers: tuple[int, ...] = (1, 2, 4),
-                 comm_backend: str = "xla"):
+                 comm_backend: str = "xla",
+                 tracker: Tracker | None = None):
         """``candidates`` fixes the plan set (the engine passes the single
         plan its mesh can execute; the benchmark passes None to enumerate
         every feasible (cfg, pp) split).  ``base_patches`` > 0 enables
@@ -50,7 +52,10 @@ class PlanCache:
         displaced pipelining).  ``comm_backend`` is the channel lowering
         the engine will execute with ("pallas" = kernel-fused, DESIGN.md
         §8.1); candidate plans are scored under it, so the fused path's
-        lower per-step issue cost is what the selection sees."""
+        lower per-step issue cost is what the selection sees.
+        ``tracker`` is the metrics sink hit/miss/invalidation counters are
+        published to (DESIGN.md §11); None = a private aggregate-only
+        ``Tracker`` so the counter attributes keep working standalone."""
         self.net = net or NetworkModel()
         self.heads = heads
         self.head_dim = head_dim
@@ -72,14 +77,35 @@ class PlanCache:
         assert self.candidates, "plan cache needs at least one candidate"
         self.plans: dict[tuple[int, int], PlanChoice] = {}
         self._steps: dict[tuple[int, int], Any] = {}
-        self.hits = 0
-        self.misses = 0
-        # plan-score cache counters, separate from the compiled-step ones:
-        # a recalibration invalidates SCORES (plan_misses grow again) but
-        # never compiled steps (hits/misses/traces untouched)
-        self.plan_hits = 0
-        self.plan_misses = 0
-        self.invalidations = 0  # recalibrate() calls that cleared scores
+        # all counters live in the tracker (DESIGN.md §11); the legacy
+        # names (hits/misses/plan_hits/plan_misses/invalidations) remain
+        # as thin reads below.  Plan-score counters are separate from the
+        # compiled-step ones: a recalibration invalidates SCORES
+        # (plan_misses grow again) but never compiled steps.
+        self.tracker = tracker if tracker is not None else Tracker()
+
+    # -- tracker-backed counters (legacy attribute surface) ---------------
+    # emissions are tagged per bucket shape; the legacy attributes are the
+    # totals over every shape (counter_total), so no public API moved
+    @property
+    def hits(self) -> int:
+        return int(self.tracker.counter_total("plan_cache.step_hit"))
+
+    @property
+    def misses(self) -> int:
+        return int(self.tracker.counter_total("plan_cache.step_miss"))
+
+    @property
+    def plan_hits(self) -> int:
+        return int(self.tracker.counter_total("plan_cache.plan_hit"))
+
+    @property
+    def plan_misses(self) -> int:
+        return int(self.tracker.counter_total("plan_cache.plan_miss"))
+
+    @property
+    def invalidations(self) -> int:
+        return int(self.tracker.counter("plan_cache.invalidation"))
 
     # -- plan selection ---------------------------------------------------
     def _patch_options(self, hplan: HybridPlan, seq: int) -> list[int]:
@@ -99,9 +125,11 @@ class PlanCache:
         key = (batch_rows, seq)
         cached = self.plans.get(key)
         if cached is not None:
-            self.plan_hits += 1
+            self.tracker.count("plan_cache.plan_hit",
+                               tags={"rows": batch_rows, "seq": seq})
             return cached
-        self.plan_misses += 1
+        self.tracker.count("plan_cache.plan_miss",
+                           tags={"rows": batch_rows, "seq": seq})
         wl = LayerWorkload(batch=max(batch_rows // self.dp, 1), seq=seq,
                            heads=self.heads, head_dim=self.head_dim)
         best: PlanChoice | None = None
@@ -118,6 +146,11 @@ class PlanCache:
                     best = PlanChoice(h, np_, pred, t, t * self.num_steps)
         assert best is not None
         self.plans[key] = best
+        # the selection itself is telemetry: after a recalibration the
+        # re-scored per-shape prediction shows up as a new gauge sample
+        self.tracker.log("plan_cache.t_step_pred_s", best.t_step,
+                         tags={"rows": batch_rows, "seq": seq,
+                               "patches": best.num_patches})
         return best
 
     def recalibrate(self, net: NetworkModel) -> None:
@@ -129,7 +162,7 @@ class PlanCache:
         latencies move."""
         self.net = net
         self.plans.clear()
-        self.invalidations += 1
+        self.tracker.count("plan_cache.invalidation")
 
     # -- compiled-step memoization ---------------------------------------
     def step_fn(self, batch_rows: int, seq: int, build: Callable[[], Any],
@@ -142,10 +175,11 @@ class PlanCache:
         old one stays cached."""
         key = (batch_rows, seq) if variant is None else (batch_rows, seq,
                                                          variant)
+        tags = {"rows": batch_rows, "seq": seq}
         if key in self._steps:
-            self.hits += 1
+            self.tracker.count("plan_cache.step_hit", tags=tags)
         else:
-            self.misses += 1
+            self.tracker.count("plan_cache.step_miss", tags=tags)
             self._steps[key] = build()
         return self._steps[key]
 

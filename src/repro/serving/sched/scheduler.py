@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..metrics import Tracker
 from .admission import AdmissionPolicy, Candidate, SchedConfig
 from .bucketer import Bucketer, BucketStats
 from .forecast import ArrivalForecaster
@@ -33,14 +34,27 @@ class Admission:
 class RequestScheduler:
     def __init__(self, plan_cache: PlanCache,
                  cfg: SchedConfig = SchedConfig(),
-                 forecaster: ArrivalForecaster | None = None):
+                 forecaster: ArrivalForecaster | None = None,
+                 tracker: Tracker | None = None):
         self.cfg = cfg
         self.plan_cache = plan_cache
         self.bucketer = Bucketer()
         self.forecaster = forecaster
-        self.policy = AdmissionPolicy(cfg, plan_cache, forecaster)
-        self.admissions: int = 0
-        self.preempted: int = 0  # requests returned via requeue()
+        # share the engine's sink by default (an engine passes its own;
+        # standalone schedulers fall back to the plan cache's)
+        self.tracker = tracker if tracker is not None else plan_cache.tracker
+        self.policy = AdmissionPolicy(cfg, plan_cache, forecaster,
+                                      tracker=self.tracker)
+
+    # -- tracker-backed counters (legacy attribute surface, DESIGN.md §11)
+    @property
+    def admissions(self) -> int:
+        return int(self.tracker.counter_total("sched.admissions"))
+
+    @property
+    def preempted(self) -> int:
+        """Requests returned via ``requeue()``."""
+        return int(self.tracker.counter("sched.requeued_requests"))
 
     def submit(self, req, now: float) -> None:
         """Enqueue a request, stamping its submission time (the basis for
@@ -50,6 +64,7 @@ class RequestScheduler:
         if self.forecaster is not None:
             self.forecaster.observe(req.seq_len, now)
         self.bucketer.add(req)
+        self.tracker.count("sched.submitted", tags={"seq": req.seq_len})
 
     def requeue(self, reqs: list, pad_rows: int = 0) -> None:
         """Park a preempted batch: its requests return to the HEAD of
@@ -61,7 +76,7 @@ class RequestScheduler:
         traffic.  ``admissions`` is NOT decremented: it counts
         ``next_batch`` decisions, parked or not."""
         self.bucketer.requeue(reqs, pad_rows)
-        self.preempted += len(reqs)
+        self.tracker.count("sched.requeued_requests", len(reqs))
 
     @property
     def pending(self) -> int:
@@ -75,7 +90,12 @@ class RequestScheduler:
         if cand is None:
             return None
         reqs = cand.bucket.pop(cand.k, now, self.cfg.dp)
-        self.admissions += 1
+        t = self.tracker
+        tags = {"seq": cand.bucket.seq_len}
+        t.count("sched.admissions", tags=tags)
+        t.count("sched.pad_rows", cand.pad_rows, tags=tags)
+        t.log("sched.batch_wait_s", cand.age, tags=tags)
+        t.log("sched.min_slack_s", cand.min_slack, tags=tags)
         return Admission(cand.bucket.seq_len, reqs, cand.batch_rows,
                          cand.pad_rows, cand.plan, cand.min_slack, cand.age)
 

@@ -1,0 +1,184 @@
+"""Metrics stream end-to-end (DESIGN.md §11) on the 8-fake-device hybrid
+mesh: a ``DiTServer`` with the full control loop (preemption +
+recalibration) and a ``JsonlTracker`` serves a bursty queue — two 256
+requests parked mid-batch for an injected SLA-critical 1024 request —
+and the JSONL trace must tell the whole story:
+
+  * every line schema-validates and the stream is totally ordered,
+  * the park shows up as an ``engine.park`` event naming the parked
+    admission and rids, and those rids later complete with
+    ``preemptions > 0`` under a NEW admission id (the restart),
+  * each completed request's ``engine.t_step_s`` series (matched by its
+    admission tag) has exactly ``len(DiTResult.step_times)`` samples,
+    with per-step wall clocks agreeing sample-for-sample,
+  * the calibrator's refit counters and measured-step gauges stream
+    alongside,
+  * the tracker-backed legacy attributes equal the trace's final
+    cumulative counter values (the migration contract, on-mesh).
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import PipelineConfig, SPConfig
+from repro.launch.mesh import make_hybrid_mesh
+from repro.serving import (
+    CalibrationConfig,
+    ControlConfig,
+    DiTRequest,
+    DiTServer,
+    JsonlTracker,
+    PreemptionPolicy,
+    SamplerConfig,
+    SchedConfig,
+    read_jsonl,
+)
+
+URGENT_SLA = 1.0  # see tests/multidevice/test_preempt_e2e.py
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One bursty serve with the full control loop streaming to JSONL:
+    two 256 requests admitted, an urgent 1024 request injected after the
+    batch's first step, the 256 batch parked and later restarted."""
+    cfg = dataclasses.replace(get_reduced("flux-12b"), dtype="float32")
+    from repro.models import get_model
+
+    bundle = get_model(cfg)
+    params, axes = bundle.init(cfg, jax.random.PRNGKey(0), 1)
+    mesh = make_hybrid_mesh(cfg=1, pipe=2, data=2, model=2)
+    sp = SPConfig(strategy="swift_torus", sp_axes=("model",),
+                  batch_axes=("data",), pp_axis="pipe")
+    path = tmp_path_factory.mktemp("metrics") / "trace.jsonl"
+    tracker = JsonlTracker(path)
+    srv = DiTServer(
+        params, cfg, mesh, sp,
+        sampler=SamplerConfig(num_steps=3,
+                              pipeline=PipelineConfig(pp=2, warmup_steps=1)),
+        max_batch=2, param_axes=axes,
+        sched=SchedConfig(max_batch=2, starvation_age=3600.0,
+                          default_slack=1e9),
+        control=ControlConfig(
+            preemption=PreemptionPolicy(min_remaining_steps=1),
+            calibration=CalibrationConfig(min_samples=1, refit_every=1)),
+        tracker=tracker)
+    srv.submit(DiTRequest(rid=0, seq_len=256))
+    srv.submit(DiTRequest(rid=1, seq_len=256))
+    injected = []
+
+    def inject(server, step):
+        if not injected:
+            injected.append(step)
+            server.submit(DiTRequest(rid=2, seq_len=1024, sla=URGENT_SLA))
+
+    srv.on_step = inject
+    results = srv.serve()
+    srv.on_step = None
+    tracker.flush()
+    return srv, results, read_jsonl(path)  # read_jsonl validates each line
+
+
+def _by_name(records, name):
+    return [r for r in records if r.name == name]
+
+
+def test_stream_is_validated_and_totally_ordered(served):
+    _, _, records = served
+    assert records, "serve produced no metrics"
+    assert [r.seq for r in records] == list(range(len(records)))
+    # counters are monotone per (name, tags) series across the trace
+    per_series = {}
+    for r in records:
+        if r.kind == "counter":
+            per_series.setdefault(
+                (r.name, tuple(sorted(r.tags.items()))), []).append(r.value)
+    assert per_series, "no counter records in the trace"
+    for vals in per_series.values():
+        assert vals == sorted(vals)
+
+
+def test_park_and_restart_events(served):
+    srv, results, records = served
+    parks = _by_name(records, "engine.park")
+    assert len(parks) == srv.preemptions >= 1
+    # the park names the parked requests; rids 0 and 1 were in the batch
+    parked_rids = set()
+    for p in parks:
+        parked_rids |= {int(x) for x in str(p.tags["rids"]).split(",")}
+        assert p.tags["seq"] == 256
+    assert parked_rids == {0, 1}
+    done = _by_name(records, "engine.request_done")
+    assert sorted(r.tags["rid"] for r in done) == [0, 1, 2]
+    by_rid = {r.tags["rid"]: r for r in done}
+    # the restart: parked rids complete with preemptions > 0 under a new
+    # admission id; the urgent request ran clean
+    parked_adm = {p.tags["adm"] for p in parks}
+    for rid in (0, 1):
+        assert by_rid[rid].tags["preemptions"] >= 1
+        assert by_rid[rid].tags["adm"] not in parked_adm
+    assert by_rid[2].tags["preemptions"] == 0
+    # request_done mirrors the result object (sla_met is NOT asserted
+    # true: on this CPU mesh the urgent bucket's jit trace can eat the
+    # whole deadline — the trace must report whatever actually happened)
+    for r in results:
+        assert by_rid[r.rid].value == pytest.approx(r.latency)
+        assert by_rid[r.rid].tags["sla_met"] is r.sla_met
+
+
+def test_per_step_series_matches_result_step_times(served):
+    _, results, records = served
+    steps = _by_name(records, "engine.t_step_s")
+    done = {r.tags["rid"]: r for r in _by_name(records, "engine.request_done")}
+    for res in results:
+        adm = done[res.rid].tags["adm"]
+        series = sorted((r for r in steps if r.tags["adm"] == adm),
+                        key=lambda r: r.step)
+        # the completing run's step series, sample-for-sample
+        assert len(series) == len(res.step_times) == 3
+        assert [r.step for r in series] == [0, 1, 2]
+        for rec, t in zip(series, res.step_times):
+            assert rec.value == pytest.approx(t)
+    # the parked admission also measured steps (before its park), so the
+    # trace holds MORE step samples than the completing runs alone
+    completed_adms = {done[r.rid].tags["adm"] for r in results}
+    assert any(r.tags["adm"] not in completed_adms for r in steps)
+
+
+def test_calibration_events_stream(served):
+    srv, results, records = served
+    refits = _by_name(records, "calibration.refits")
+    # refit_every=1/min_samples=1: every completed batch triggers one
+    completed_batches = len(_by_name(records, "engine.batch_done"))
+    assert len(refits) == completed_batches >= 2
+    assert refits[-1].value == srv.calibrator.refits
+    measured = _by_name(records, "calibration.measured_step_us")
+    assert len(measured) == completed_batches
+    assert all(m.value > 0 for m in measured)
+    # each refit publishes the per-parameter drift-ratio trajectory
+    ratios = _by_name(records, "calibration.drift_ratio")
+    assert ratios and {r.tags["param"] for r in ratios} == \
+        set(srv.calibrator.last_ratios)
+    assert all(r.value > 0 for r in ratios)
+
+
+def test_legacy_attributes_equal_final_counter_values(served):
+    srv, results, records = served
+
+    def final_total(name):
+        last = {}
+        for r in records:
+            if r.kind == "counter" and r.name == name:
+                last[tuple(sorted(r.tags.items()))] = r.value
+        return sum(last.values())
+
+    assert srv.preemptions == final_total("engine.preemptions")
+    assert srv.scheduler.admissions == final_total("sched.admissions")
+    assert srv.scheduler.preempted == final_total("sched.requeued_requests")
+    assert srv.plan_cache.hits == final_total("plan_cache.step_hit")
+    assert srv.plan_cache.traces == final_total("plan_cache.step_miss")
+    assert srv.calibrator.refits == final_total("calibration.refits")
+    assert final_total("engine.completed") == len(results) == 3
+    assert final_total("engine.restarted_requests") == 2

@@ -1,0 +1,137 @@
+"""Direct ``DriftPolicy`` unit coverage (serving/sched/drift.py): the
+threshold decision's edges — zero drift, exactly-at-threshold (the bound
+is STRICT: ``d > bound``, so a trajectory sitting on its bound never
+resyncs), per-request overrides in both directions, warmup dominance —
+plus the ``drift.trigger`` telemetry (DESIGN.md §11): the crossing that
+forces a warm step is published with the offending row and bound, and a
+decision that doesn't trigger publishes nothing."""
+import dataclasses
+
+import pytest
+
+from repro.core.pipefusion import PipelineConfig
+from repro.serving.metrics import NullTracker, RecordingTracker
+from repro.serving.sched import DriftPolicy
+
+PIPE = PipelineConfig(pp=2, warmup_steps=1)
+
+
+# ---------------------------------------------------------------------------
+# threshold edges
+# ---------------------------------------------------------------------------
+
+def test_zero_drift_never_triggers():
+    """d == 0 stays displaced even under the tightest possible bound
+    (0.0): the rule is strictly 'staleness EXCEEDS the bound'."""
+    pol = DriftPolicy(threshold=0.0)
+    assert not pol.warm(PIPE, 3, [0.0], [None])
+    assert not pol.warm(PIPE, 3, [0.0, 0.0, 0.0], [None, None, None])
+
+
+def test_exactly_at_threshold_does_not_trigger():
+    pol = DriftPolicy(threshold=0.25)
+    assert not pol.warm(PIPE, 2, [0.25], [None])  # d == bound: no resync
+    assert pol.warm(PIPE, 2, [0.25 + 1e-9], [None])  # just past: resync
+
+
+def test_exactly_at_per_request_threshold_does_not_trigger():
+    pol = DriftPolicy(threshold=None)
+    assert not pol.warm(PIPE, 2, [0.1], [0.1])
+    assert pol.warm(PIPE, 2, [0.1 + 1e-9], [0.1])
+
+
+def test_warmup_steps_always_warm():
+    """Warmup wins over everything — even a crossed bound is moot (the
+    step was already synchronous), and no trigger event is published."""
+    t = RecordingTracker()
+    pol = DriftPolicy(threshold=0.0)
+    pipe = PipelineConfig(pp=2, warmup_steps=3)
+    for step in range(3):
+        assert pol.warm(pipe, step, [99.0], [None], tracker=t)
+    assert t.records == []
+
+
+def test_first_post_warmup_step_has_no_history():
+    # last_drift None = the previous step was warm (or none ran): fresh
+    # KV cannot have drifted, so never resync on it
+    pol = DriftPolicy(threshold=0.0)
+    assert not pol.warm(PIPE, PIPE.warmup_steps, None, [None])
+
+
+def test_no_bound_anywhere_never_triggers():
+    pol = DriftPolicy()  # threshold=None
+    assert not pol.warm(PIPE, 5, [1e9], [None, None])
+    assert not pol.engaged([None, None])
+    assert not pol.engaged([])
+
+
+# ---------------------------------------------------------------------------
+# per-request override (both directions)
+# ---------------------------------------------------------------------------
+
+def test_tighter_request_bound_overrides_loose_default():
+    pol = DriftPolicy(threshold=0.5)
+    assert pol.warm(PIPE, 2, [0.1], [0.05])  # request bound crossed
+    assert not pol.warm(PIPE, 2, [0.1], [None])  # default bound isn't
+
+
+def test_looser_request_bound_overrides_tight_default():
+    """A request carrying its own bound is judged ONLY by it — the
+    policy default applies to bound-less requests, not on top."""
+    pol = DriftPolicy(threshold=0.05)
+    assert not pol.warm(PIPE, 2, [0.1], [0.5])
+    # a second bound-less request at the same drift falls back to the
+    # tight default and triggers
+    assert pol.warm(PIPE, 2, [0.1, 0.1], [0.5, None])
+
+
+def test_any_row_crossing_triggers_for_the_whole_batch():
+    pol = DriftPolicy(threshold=None)
+    # resync is batch-granular: one crossing row warms everyone
+    assert pol.warm(PIPE, 2, [0.0, 0.0, 0.3], [None, None, 0.2])
+
+
+def test_engaged_per_request_only():
+    assert DriftPolicy().engaged([None, 0.3])
+    assert DriftPolicy(threshold=0.1).engaged([None, None])
+
+
+# ---------------------------------------------------------------------------
+# drift.trigger telemetry
+# ---------------------------------------------------------------------------
+
+def test_trigger_published_with_row_and_bound():
+    t = RecordingTracker()
+    pol = DriftPolicy(threshold=0.5)
+    assert pol.warm(PIPE, 4, [0.1, 0.7, 0.9], [None, None, None], tracker=t)
+    assert len(t.records) == 1  # first crossing row decides; no double log
+    r = t.records[0]
+    assert r.name == "drift.trigger" and r.kind == "gauge"
+    assert r.value == pytest.approx(0.7)  # the offending drift value
+    assert r.step == 4
+    assert r.tags == {"row": 1, "bound": 0.5}
+
+
+def test_trigger_reports_per_request_bound():
+    t = RecordingTracker()
+    pol = DriftPolicy(threshold=0.5)
+    assert pol.warm(PIPE, 2, [0.1], [0.05], tracker=t)
+    assert t.records[0].tags == {"row": 0, "bound": 0.05}
+
+
+def test_no_trigger_publishes_nothing():
+    t = RecordingTracker()
+    pol = DriftPolicy(threshold=0.5)
+    assert not pol.warm(PIPE, 2, [0.1, 0.2], [None, None], tracker=t)
+    assert t.records == []
+
+
+def test_tracker_optional_and_null_safe():
+    pol = DriftPolicy(threshold=0.1)
+    assert pol.warm(PIPE, 2, [0.2], [None])  # tracker=None: same decision
+    assert pol.warm(PIPE, 2, [0.2], [None], tracker=NullTracker())
+
+
+def test_policy_is_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        DriftPolicy(threshold=0.1).threshold = 0.2

@@ -1,0 +1,397 @@
+"""Serving observability subsystem (serving/metrics.py, DESIGN.md §11):
+the tracker sink contract the whole control loop now publishes through —
+
+  (a) counters are monotone and every counter record carries the NEW
+      cumulative total (a trace replays without summing),
+  (b) a ``JsonlTracker`` trace round-trips bit-exactly (bytes and
+      ``Record`` objects) through ``read_jsonl``,
+  (c) stream order (``seq``), ``step`` and ``tags`` survive the disk
+      round-trip unchanged,
+  (d) ``NullTracker`` is a TRUE no-op,
+  (e) every record is schema-versioned and ``validate_record`` rejects
+      each class of malformed record,
+
+plus the counter-migration regression: the legacy attribute surface
+(``PlanCache.hits`` & co.) must read exactly what the record stream says
+on a mixed-resolution serve — pinned here so future sinks can't drift
+from the attributes tests and launchers consume.
+
+All host-side (no jax, no mesh); property tests use seeded
+mini-hypothesis (see tests/_mini_hypothesis.py)."""
+import dataclasses
+import json
+import pathlib
+import random
+import tempfile
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.metrics import (
+    KINDS,
+    SCHEMA_VERSION,
+    JsonlTracker,
+    NullTracker,
+    Record,
+    RecordingTracker,
+    SeriesStats,
+    Tracker,
+    read_jsonl,
+    replay,
+    validate_record,
+)
+
+NAMES = ("engine.t_step_s", "plan_cache.step_hit", "sched.admissions",
+         "calibration.drift_ratio", "sim.batches")
+TAGSETS = (None, {"seq": 256}, {"seq": 512, "rows": 4},
+           {"adm": 3, "warm": True}, {"param": "alpha_us"})
+
+
+def _drive(tracker: Tracker, seed: int, n_ops: int = 40) -> None:
+    """Deterministic mixed counter/gauge stream (the shared generator the
+    property tests replay into multiple sinks)."""
+    rnd = random.Random(seed)
+    for i in range(n_ops):
+        name = rnd.choice(NAMES)
+        tags = rnd.choice(TAGSETS)
+        step = rnd.randrange(100) if rnd.random() < 0.5 else None
+        if rnd.random() < 0.5:
+            tracker.count(name, rnd.randrange(0, 5), step=step, tags=tags)
+        else:
+            tracker.log(name, rnd.uniform(-10, 10), step=step, tags=tags)
+
+
+# ---------------------------------------------------------------------------
+# (a) counter semantics
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_counters_monotone_and_records_carry_totals(seed):
+    rnd = random.Random(seed)
+    t = RecordingTracker()
+    expect: dict[tuple, float] = {}
+    for _ in range(rnd.randint(1, 60)):
+        name = rnd.choice(NAMES)
+        tags = rnd.choice(TAGSETS)
+        inc = rnd.randrange(0, 7)
+        key = (name, tuple(sorted((tags or {}).items())))
+        expect[key] = expect.get(key, 0.0) + inc
+        total = t.count(name, inc, tags=tags)
+        # count() returns (and the record carries) the NEW cumulative total
+        assert total == expect[key]
+        assert t.records[-1].kind == "counter"
+        assert t.records[-1].value == expect[key]
+        assert t.counter(name, tags) == expect[key]
+    # per-series record values never decrease (monotone counters)
+    per_series: dict[tuple, list[float]] = {}
+    for r in t.records:
+        per_series.setdefault(
+            (r.name, tuple(sorted(r.tags.items()))), []).append(r.value)
+    for vals in per_series.values():
+        assert vals == sorted(vals)
+    # counter_total sums across every tag set of the name
+    for name in NAMES:
+        assert t.counter_total(name) == pytest.approx(
+            sum(v for (n, _), v in expect.items() if n == name))
+
+
+def test_negative_counter_increment_rejected():
+    with pytest.raises(AssertionError):
+        Tracker().count("x", -1.0)
+
+
+def test_gauge_series_stats():
+    t = Tracker()
+    for v in (3.0, -1.0, 5.0):
+        t.log("g", v, tags={"seq": 256})
+    st_ = t.series("g", {"seq": 256})
+    assert (st_.n, st_.vmin, st_.vmax, st_.last) == (3, -1.0, 5.0, 5.0)
+    assert st_.mean == pytest.approx(7.0 / 3.0)
+    # an unseen series reads as empty stats, not KeyError
+    empty = t.series("g", {"seq": 1024})
+    assert isinstance(empty, SeriesStats) and empty.n == 0
+
+
+# ---------------------------------------------------------------------------
+# (b) JSONL bit-exact round-trip
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_jsonl_round_trip_bit_exact(seed):
+    with tempfile.TemporaryDirectory() as td:
+        p1 = pathlib.Path(td) / "a.jsonl"
+        p2 = pathlib.Path(td) / "b.jsonl"
+        rec = RecordingTracker()
+        with JsonlTracker(p1) as j1:
+            _drive(rec, seed)
+            _drive(j1, seed)
+        # Record-level equality: disk stream == in-memory stream
+        assert read_jsonl(p1) == rec.records
+        # byte-level determinism: the same stream writes identical bytes
+        with JsonlTracker(p2) as j2:
+            _drive(j2, seed)
+        assert p1.read_bytes() == p2.read_bytes()
+        # aggregate parity: both sinks saw the same totals
+        for name in NAMES:
+            assert j1.counter_total(name) == rec.counter_total(name)
+
+
+def test_jsonl_valid_at_every_prefix(tmp_path):
+    """Every line is complete JSON the moment it's written — a crashed
+    run's trace is readable up to the last record."""
+    p = tmp_path / "t.jsonl"
+    t = JsonlTracker(p)
+    t.count("a", 1)
+    t.log("b", 2.5, step=3, tags={"seq": 256})
+    t.flush()
+    lines = p.read_text().splitlines()
+    assert len(lines) == 2
+    for line in lines:
+        assert validate_record(json.loads(line)) == []
+    t.close()
+    t.close()  # idempotent
+
+
+def test_replay_rebuilds_aggregates(tmp_path):
+    p = tmp_path / "t.jsonl"
+    with JsonlTracker(p) as t:
+        _drive(t, seed=7)
+    back = replay(read_jsonl(p))
+    for name in NAMES:
+        assert back.counter_total(name) == t.counter_total(name)
+    for tags in TAGSETS:
+        for name in NAMES:
+            assert back.counter(name, tags) == t.counter(name, tags)
+            assert back.series(name, tags).n == t.series(name, tags).n
+
+
+# ---------------------------------------------------------------------------
+# (c) ordering, step and tags survive the round-trip
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_seq_total_order_and_step_tags_preserved(seed):
+    with tempfile.TemporaryDirectory() as td:
+        p = pathlib.Path(td) / "t.jsonl"
+        with JsonlTracker(p) as t:
+            _drive(t, seed)
+        recs = read_jsonl(p)
+        # seq is the dense 0..n-1 total order of the stream, in file order
+        assert [r.seq for r in recs] == list(range(len(recs)))
+        # regenerate the identical stream and compare field-by-field
+        mirror = RecordingTracker()
+        _drive(mirror, seed)
+        for a, b in zip(recs, mirror.records):
+            assert (a.name, a.kind, a.value, a.step, a.tags) == \
+                   (b.name, b.kind, b.value, b.step, b.tags)
+
+
+def test_tag_order_is_canonical():
+    """The same tag set in any insertion order is one series."""
+    t = Tracker()
+    t.count("c", 1, tags={"a": 1, "b": 2})
+    t.count("c", 1, tags={"b": 2, "a": 1})
+    assert t.counter("c", {"a": 1, "b": 2}) == 2
+    assert t.counter_total("c") == 2
+
+
+# ---------------------------------------------------------------------------
+# (d) NullTracker is a TRUE no-op
+# ---------------------------------------------------------------------------
+
+def test_null_tracker_noop():
+    t = NullTracker()
+    assert t.count("a", 5, tags={"seq": 256}) == 0.0
+    t.log("b", 1.0, step=3)
+    assert t.counter("a", {"seq": 256}) == 0.0
+    assert t.counter_total("a") == 0.0
+    assert t.series("b").n == 0
+    assert t.summary() == []
+    assert not t.persistent
+
+
+# ---------------------------------------------------------------------------
+# (e) schema versioning + validate_record
+# ---------------------------------------------------------------------------
+
+def test_every_record_is_schema_versioned():
+    t = RecordingTracker()
+    _drive(t, seed=3)
+    assert t.records, "generator produced no records"
+    for r in t.records:
+        assert r.schema == SCHEMA_VERSION
+        assert r.kind in KINDS
+        assert validate_record(r.to_dict()) == []
+
+
+def test_record_dict_round_trip():
+    r = Record(name="n", value=1.5, kind="gauge", step=4,
+               tags={"seq": 256, "warm": True}, seq=9)
+    assert Record.from_dict(r.to_dict()) == r
+    # omitted optionals stay omitted on disk but default on the way back
+    bare = Record(name="n", value=2.0, kind="counter", seq=0)
+    d = bare.to_dict()
+    assert "step" not in d and "tags" not in d
+    assert Record.from_dict(d) == bare
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.pop("schema"), "missing field"),
+    (lambda d: d.pop("name"), "missing field"),
+    (lambda d: d.pop("seq"), "missing field"),
+    (lambda d: d.update(schema="metrics.v0"), "schema"),
+    (lambda d: d.update(kind="histogram"), "kind"),
+    (lambda d: d.update(value=True), "not a number"),
+    (lambda d: d.update(value="fast"), "not a number"),
+    (lambda d: d.update(seq=-1), "seq"),
+    (lambda d: d.update(step=1.5), "step"),
+    (lambda d: d.update(tags={"k": [1, 2]}), "tag"),
+    (lambda d: d.update(surprise=1), "unknown fields"),
+])
+def test_validate_record_rejects_malformed(mutate, needle):
+    d = Record(name="n", value=1.0, kind="gauge", seq=0).to_dict()
+    mutate(d)
+    errs = validate_record(d)
+    assert errs and any(needle in e for e in errs), errs
+
+
+def test_read_jsonl_raises_on_malformed_line(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    good = Record(name="n", value=1.0, kind="gauge", seq=0).to_dict()
+    bad = dict(good, schema="metrics.v0")
+    p.write_text(json.dumps(good) + "\n" + json.dumps(bad) + "\n")
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        read_jsonl(p)
+    assert len(read_jsonl(p, validate=False)) == 2
+
+
+# ---------------------------------------------------------------------------
+# summary table
+# ---------------------------------------------------------------------------
+
+def test_summary_rows_and_format():
+    t = Tracker()
+    t.count("c", 2, tags={"seq": 256})
+    t.log("g", 1.5)
+    t.log("g", 2.5)
+    rows = {(r["name"], r["kind"]): r for r in t.summary()}
+    assert rows[("c", "counter")]["value"] == 2
+    g = rows[("g", "gauge")]
+    assert (g["n"], g["mean"], g["min"], g["max"]) == (2, 2.0, 1.5, 2.5)
+    text = t.format_summary()
+    assert "c{seq=256}" in text and "counter" in text and "gauge" in text
+
+
+# ---------------------------------------------------------------------------
+# counter-migration regression: legacy attributes == the record stream
+# ---------------------------------------------------------------------------
+
+def _mixed_drain(tracker: Tracker):
+    """A mixed-resolution stream through the real scheduler + plan cache
+    (the objects the engine wires to one tracker), drained to empty."""
+    from repro.serving.sched import RequestScheduler, SchedConfig
+    from tests.test_sched import Req, make_cache
+
+    cache = make_cache(dp=2, tracker=tracker)
+    sched = RequestScheduler(
+        cache, SchedConfig(max_batch=4, dp=2, starvation_age=10.0,
+                           aging_rate=1.0, default_slack=100.0,
+                           defer_slack=1.0), tracker=tracker)
+    lens = [256, 512, 256, 1024, 512, 256, 1024, 256, 256, 512]
+    for i, n in enumerate(lens):
+        sched.submit(Req(i, n), now=0.01 * i)
+    admissions = []
+    now = 1.0
+    while sched.pending:
+        adm = sched.next_batch(now, flush=True)
+        cache.step_fn(adm.batch_rows, adm.seq_len, lambda: (lambda: None))
+        admissions.append(adm)
+        now += 0.1
+    return cache, sched, admissions
+
+
+def test_legacy_attributes_match_record_stream():
+    t = RecordingTracker()
+    cache, sched, admissions = _mixed_drain(t)
+
+    def final_totals(name: str) -> float:
+        # counter records carry cumulative totals: the last record per
+        # tag set is that series' final count
+        last: dict[tuple, float] = {}
+        for r in t.records:
+            if r.kind == "counter" and r.name == name:
+                last[tuple(sorted(r.tags.items()))] = r.value
+        return sum(last.values())
+
+    # the legacy attribute surface reads exactly what the stream says
+    assert sched.admissions == final_totals("sched.admissions") == \
+        len(admissions)
+    assert cache.plan_misses == final_totals("plan_cache.plan_miss")
+    assert cache.plan_hits == final_totals("plan_cache.plan_hit")
+    assert cache.hits == final_totals("plan_cache.step_hit")
+    assert cache.misses == final_totals("plan_cache.step_miss")
+    # structural cross-checks: one compiled trace per ADMITTED shape (the
+    # plan cache also scores candidate shapes that are never admitted, so
+    # plans >= compiled shapes)
+    shapes = {(a.batch_rows, a.seq_len) for a in admissions}
+    assert cache.misses == cache.traces == len(shapes) > 0
+    assert cache.hits == len(admissions) - len(shapes)
+    assert cache.plan_misses == len(cache.plans) >= len(shapes)
+    assert cache.plan_hits > 0  # repeated scoring of known shapes
+    assert final_totals("sched.submitted") == 10
+
+
+def test_default_and_recording_trackers_agree():
+    """The aggregate-only default sink and the recording sink see the
+    same totals on the same drain — persistence must not change
+    accounting."""
+    t_rec, t_plain = RecordingTracker(), Tracker()
+    cache_r, sched_r, _ = _mixed_drain(t_rec)
+    cache_p, sched_p, _ = _mixed_drain(t_plain)
+    assert (cache_r.hits, cache_r.misses, cache_r.plan_hits,
+            cache_r.plan_misses, sched_r.admissions) == \
+           (cache_p.hits, cache_p.misses, cache_p.plan_hits,
+            cache_p.plan_misses, sched_p.admissions)
+
+
+def test_calibrator_counters_through_tracker():
+    """OnlineCalibrator's refit/recalibration tallies live in the
+    tracker now; the attributes are reads of it."""
+    from repro.serving.sched import CalibrationConfig, OnlineCalibrator
+    from tests.test_sched import make_cache
+
+    t = RecordingTracker()
+    cache = make_cache(dp=2, tracker=t)
+    choice = cache.select(4, 256)
+    cal = OnlineCalibrator(
+        cache, CalibrationConfig(min_samples=1, refit_every=1), tracker=t)
+    assert cal.refits == 0 and cal.recalibrations == 0
+    # wildly slower than predicted -> refit and (damped) drift
+    for _ in range(3):
+        cal.observe(choice, 4, 256, [choice.t_step * 50.0] * 4)
+    assert cal.refits == 3
+    assert cal.refits == t.counter("calibration.refits")
+    assert t.series("calibration.measured_step_us",
+                    {"rows": 4, "seq": 256}).n == 3
+    drift_records = [r for r in t.records
+                     if r.name == "calibration.drift_ratio"]
+    assert drift_records and all(r.kind == "gauge" for r in drift_records)
+    assert cal.recalibrations == t.counter("calibration.recalibrations")
+
+
+def test_forecaster_publishes_gap_series():
+    from repro.serving.sched import ArrivalForecaster
+
+    t = RecordingTracker()
+    f = ArrivalForecaster(tracker=t)
+    f.observe(256, 0.0)  # first arrival: no gap yet
+    assert t.series("forecast.mean_gap_s", {"seq": 256}).n == 0
+    f.observe(256, 1.0)
+    f.observe(256, 2.0)
+    assert t.series("forecast.mean_gap_s", {"seq": 256}).n == 2
+    assert t.series("forecast.mean_gap_s", {"seq": 256}).last == \
+        pytest.approx(1.0)
