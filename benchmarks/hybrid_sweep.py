@@ -108,6 +108,9 @@ def records(net: NetworkModel | None = None) -> list[dict]:
             "predicted_step_us": pred["t_step"] * 1e6,
             "predicted_breakdown": {k: v for k, v in pred.items()
                                     if k != "t_step"},
+            # first-class column (DESIGN.md §12): fraction of hideable
+            # comm the intended schedule actually hides for this plan
+            "overlap_efficiency": pred.get("overlap_efficiency"),
             "measured_step_us": None,
         })
     return out

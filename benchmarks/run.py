@@ -50,12 +50,20 @@ def write_bench_json(out_dir: pathlib.Path, module_name: str,
     """Write one BENCH_<module>.json trajectory record."""
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"BENCH_{module_name}.json"
+    records = [dict(r) for r in records] if records else []
+    for rec in records:
+        # surface the comm model's predicted overlap efficiency
+        # (DESIGN.md §12) as a first-class column, next to the latency it
+        # modulates — consumers should not have to dig in the breakdown
+        if "overlap_efficiency" not in rec:
+            bd = rec.get("predicted_breakdown") or {}
+            rec["overlap_efficiency"] = bd.get("overlap_efficiency")
     payload = {
         "schema": "bench.v1",
         "module": module_name,
         "generated_at": time.time(),
         "rows": [parse_row(r) for r in rows],
-        "records": records or [],
+        "records": records,
     }
     path.write_text(json.dumps(payload, indent=1, sort_keys=True))
     return path
@@ -72,12 +80,25 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--metrics", default=None, metavar="OUT.JSONL",
                     help="stream each row through the serving metrics "
                          "sink as schema-versioned JSONL (DESIGN.md §11)")
+    ap.add_argument("--profile", default=None, metavar="TRACE.JSONL",
+                    help="--metrics plus the span-level comm profiler "
+                         "(DESIGN.md §12): device-executing modules also "
+                         "stream per-device comm-leg/compute spans; render "
+                         "with scripts/trace_report.py")
     args = ap.parse_args(argv)
+    if args.profile is not None and args.metrics is not None:
+        ap.error("--profile already streams metrics records; "
+                 "give one output path, not both")
 
+    import contextlib
+
+    from repro.comm import CommProfiler, emit_leg_spans
+    from repro.comm import profile as comm_profile
     from repro.serving.metrics import JsonlTracker, Tracker
 
-    tracker = (JsonlTracker(args.metrics) if args.metrics is not None
-               else Tracker())
+    sink = args.profile if args.profile is not None else args.metrics
+    tracker = JsonlTracker(sink) if sink is not None else Tracker()
+    profiler = CommProfiler() if args.profile is not None else None
 
     from . import (
         ablation,
@@ -113,7 +134,15 @@ def main(argv: list[str] | None = None) -> None:
         mod_name = mod.__name__.split(".")[-1]
         print(f"# --- {title} ---", file=sys.stderr)
         try:
-            rows = list(mod.run())
+            prof_ctx = (comm_profile(profiler) if profiler is not None
+                        else contextlib.nullcontext())
+            with prof_ctx:
+                rows = list(mod.run())
+            if profiler is not None:
+                n_spans = emit_leg_spans(profiler, tracker)
+                if n_spans:
+                    print(f"# {mod_name}: {n_spans} profiler spans",
+                          file=sys.stderr)
             for line in rows:
                 print(line)
                 parsed = parse_row(line)
@@ -133,8 +162,8 @@ def main(argv: list[str] | None = None) -> None:
             tracker.count("bench.errors", tags={"module": mod_name})
             ok = False
     tracker.close()
-    if args.metrics is not None:
-        print(f"# wrote {args.metrics}", file=sys.stderr)
+    if sink is not None:
+        print(f"# wrote {sink}", file=sys.stderr)
     if not ok:
         raise SystemExit(1)
 

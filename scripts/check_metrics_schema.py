@@ -7,18 +7,24 @@ Two artifact families share the serving observability surface
   * ``*.jsonl`` — metrics traces (``metrics.v1``): one record per line,
     checked with ``repro.serving.metrics.validate_record`` (the same
     checker the unit tests pin), plus the stream-level invariants the
-    sinks guarantee — ``seq`` is the dense 0..n-1 total order, and every
-    counter series is monotone (records carry cumulative totals).
+    sinks guarantee — ``seq`` is the dense 0..n-1 total order, every
+    counter series is monotone (records carry cumulative totals), and
+    span records (the §12 profiler extension) carry finite
+    ``t_start``/duration windows.
   * ``BENCH_*.json`` — benchmark trajectory records (``bench.v1``,
     benchmarks/run.py): the envelope and row/record structure
     ``scripts/calibrate_comm.py`` consumes.
 
-Usage:  python scripts/check_metrics_schema.py FILE [FILE...]
+Usage:  python scripts/check_metrics_schema.py [--partial-tail-ok] FILE...
 Exit 0 = every file conforms; violations are printed per file:line.
+``--partial-tail-ok`` tolerates a truncated FINAL line in a .jsonl trace
+(a crash mid-record; JsonlTracker flushes per record, so at most the
+last line can be cut short).
 """
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import sys
 
@@ -30,16 +36,22 @@ from repro.serving.metrics import SCHEMA_VERSION, validate_record  # noqa: E402
 BENCH_SCHEMA = "bench.v1"
 
 
-def check_metrics_jsonl(path: pathlib.Path) -> list[str]:
+def check_metrics_jsonl(path: pathlib.Path,
+                        partial_tail_ok: bool = False) -> list[str]:
     errs: list[str] = []
     counters: dict[tuple, float] = {}
     n = 0
-    for i, line in enumerate(path.read_text().splitlines(), start=1):
+    lines = path.read_text().splitlines()
+    for i, line in enumerate(lines, start=1):
         if not line.strip():
             continue
         try:
             d = json.loads(line)
         except json.JSONDecodeError as e:
+            if partial_tail_ok and i == len(lines):
+                print(f"  {path}:{i}: truncated final record dropped "
+                      "(crash tail)")
+                break
             errs.append(f"{path}:{i}: not JSON ({e})")
             continue
         msgs = validate_record(d)
@@ -57,6 +69,12 @@ def check_metrics_jsonl(path: pathlib.Path) -> list[str]:
                 errs.append(f"{path}:{i}: counter {d['name']} decreased "
                             f"({prev} -> {d['value']})")
             counters[key] = d["value"]
+        elif d.get("kind") == "span":
+            # validate_record pins type/sign; the stream gate adds the
+            # window sanity a renderer relies on
+            if not (math.isfinite(d["t_start"]) and math.isfinite(d["value"])):
+                errs.append(f"{path}:{i}: span {d['name']} has a non-finite "
+                            f"window ({d['t_start']}, {d['value']})")
     if n == 0:
         errs.append(f"{path}: empty trace (no records)")
     return errs
@@ -86,24 +104,26 @@ def check_bench_json(path: pathlib.Path) -> list[str]:
     return errs
 
 
-def check(path: pathlib.Path) -> list[str]:
+def check(path: pathlib.Path, partial_tail_ok: bool = False) -> list[str]:
     if not path.exists():
         return [f"{path}: no such file"]
     if path.suffix == ".jsonl":
-        return check_metrics_jsonl(path)
+        return check_metrics_jsonl(path, partial_tail_ok)
     if path.suffix == ".json":
         return check_bench_json(path)
     return [f"{path}: unknown artifact type (want .jsonl or BENCH_*.json)"]
 
 
 def main(argv: list[str]) -> int:
+    partial_tail_ok = "--partial-tail-ok" in argv
+    argv = [a for a in argv if a != "--partial-tail-ok"]
     if not argv:
         print(__doc__)
         return 2
     errors: list[str] = []
     for arg in argv:
         p = pathlib.Path(arg)
-        errs = check(p)
+        errs = check(p, partial_tail_ok)
         errors += errs
         kind = "metrics" if p.suffix == ".jsonl" else "bench"
         print(f"{'FAIL' if errs else 'ok':>4}  {p} ({kind})")

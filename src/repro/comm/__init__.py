@@ -22,6 +22,7 @@ so the dependency points one way.
 """
 from .channel import Channel, InFlight, fence, pin, ring_perm_of, shift_perm
 from .pallas_backend import BACKENDS
+from .profiler import CommProfiler, emit_leg_spans, profile
 from .stream import (
     Stream,
     pipe_handoff,
@@ -45,6 +46,7 @@ from .trace import (
 __all__ = [
     "BACKENDS",
     "Channel",
+    "CommProfiler",
     "InFlight",
     "ScheduleTrace",
     "SemEvent",
@@ -52,10 +54,12 @@ __all__ = [
     "Stream",
     "TransferEvent",
     "ValidationReport",
+    "emit_leg_spans",
     "fence",
     "mark_compute",
     "pin",
     "pipe_handoff",
+    "profile",
     "record",
     "ring_perm_of",
     "ring_shift",

@@ -37,6 +37,7 @@ import jax
 from jax import lax
 
 from ..compat import optimization_barrier
+from . import profiler as _profiler
 from . import trace as _trace
 
 __all__ = ["Channel", "InFlight", "fence", "pin", "ring_perm_of",
@@ -89,6 +90,9 @@ class Channel:
         """
         if self.backend == "pallas":
             return self._put_pallas(tensors, overlaps)
+        meta = self._leg_meta(tensors, overlaps, "xla")
+        if meta is not None:
+            _profiler.mark(_profiler.active(), meta, "issue", tensors)
         perm = list(self.perm)
         out = tuple(lax.ppermute(t, self.axes, perm=perm) for t in tensors)
         _trace.emit(_trace.TransferEvent(
@@ -96,7 +100,22 @@ class Channel:
             axes=tuple(self.axes), perm=tuple(self.perm),
             shape=tuple(tensors[0].shape), n_tensors=len(tensors),
             overlaps=overlaps, backend="xla"))
-        return InFlight(channel=self, payload=out)
+        if meta is not None:
+            _profiler.mark(_profiler.active(), meta, "signal", out)
+        return InFlight(channel=self, payload=out, meta=meta)
+
+    def _leg_meta(self, tensors: tuple[jax.Array, ...], overlaps: str,
+                  backend: str) -> Any:
+        """Mint the runtime-profiler leg identity for one put, or None
+        when no profiler is active at trace time (zero-cost default)."""
+        prof = _profiler.active()
+        if prof is None:
+            return None
+        return prof.new_leg(
+            kind="comm", stream=self.stream, channel=self.name,
+            stage=self.stage, axes=tuple(self.axes),
+            nbytes=_profiler.nbytes_of(tensors), n_tensors=len(tensors),
+            backend=backend, intent=overlaps)
 
     def _put_pallas(self, tensors: tuple[jax.Array, ...],
                     overlaps: str) -> "InFlight":
@@ -104,6 +123,9 @@ class Channel:
         from . import pallas_backend as _pb
 
         sem = _pb.new_sem(self.name, self.stage)
+        meta = self._leg_meta(tensors, overlaps, "pallas")
+        if meta is not None:
+            _profiler.mark(_profiler.active(), meta, "issue", tensors)
         _trace.emit(_trace.TransferEvent(
             stream=self.stream, channel=self.name, stage=self.stage,
             axes=tuple(self.axes), perm=tuple(self.perm),
@@ -113,11 +135,14 @@ class Channel:
             kind="put", sem=sem, stream=self.stream, channel=self.name,
             stage=self.stage))
         out = _pb.deliver(tensors, tuple(self.axes), tuple(self.perm),
-                          interpret=self.interpret)
+                          interpret=self.interpret, profile_src=self)
         _trace.emit_sem(_trace.SemEvent(
             kind="signal", sem=sem, stream=self.stream, channel=self.name,
             stage=self.stage))
-        return InFlight(channel=self, payload=out, sem=sem)
+        if meta is not None:
+            # the DMA-semaphore signal: fires once landing_copy delivered
+            _profiler.mark(_profiler.active(), meta, "signal", out)
+        return InFlight(channel=self, payload=out, sem=sem, meta=meta)
 
     def put_fused(self, *tensors: jax.Array, overlaps: str = "") -> "InFlight":
         """Deliver a put that was ISSUED inside a fused kernel
@@ -135,6 +160,9 @@ class Channel:
         assert self.backend == "pallas", "put_fused is a Pallas-path verb"
         from . import pallas_backend as _pb
 
+        meta = self._leg_meta(tensors, overlaps, "pallas")
+        if meta is not None:
+            _profiler.mark(_profiler.active(), meta, "issue", tensors)
         sem = _pb.fused_transfer_events(
             self, tuple(tensors[0].shape), len(tensors), overlaps=overlaps)
         # The fused kernel's DMA is a LOCAL make_async_copy into the
@@ -147,7 +175,9 @@ class Channel:
         _trace.emit_sem(_trace.SemEvent(
             kind="signal", sem=sem, stream=self.stream, channel=self.name,
             stage=self.stage))
-        return InFlight(channel=self, payload=out, sem=sem)
+        if meta is not None:
+            _profiler.mark(_profiler.active(), meta, "signal", out)
+        return InFlight(channel=self, payload=out, sem=sem, meta=meta)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +187,7 @@ class InFlight:
     channel: Channel
     payload: tuple[jax.Array, ...]
     sem: str = ""  # semaphore id (Pallas backend only)
+    meta: Any = None  # runtime-profiler leg identity (profiling only)
 
     def wait(self, *deps: jax.Array) -> Any:
         """Signal-wait: deliver the buffer, ordered after ``deps``.
@@ -172,6 +203,12 @@ class InFlight:
             _trace.emit_sem(_trace.SemEvent(
                 kind="wait", sem=self.sem, stream=self.channel.stream,
                 channel=self.channel.name, stage=self.channel.stage))
+        if self.meta is not None and _profiler.active() is not None:
+            # fires when the receiver's independent compute (the deps) is
+            # done and it truly needs the buffer; with no deps the wait
+            # is observed at delivery (exposure reads as zero)
+            _profiler.mark(_profiler.active(), self.meta, "wait",
+                           deps if deps else self.payload)
         if not deps:
             return self.payload[0] if len(self.payload) == 1 else self.payload
         vals, deps_out = fence(self.payload, deps)

@@ -46,6 +46,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import profiler as _profiler
 from . import trace as _trace
 
 __all__ = ["BACKENDS", "deliver", "fused_transfer_events", "new_sem",
@@ -164,11 +165,15 @@ def deliver(
     perm: Sequence[tuple[int, int]],
     *,
     interpret: bool = True,
+    profile_src=None,
 ) -> tuple[jax.Array, ...]:
     """Move ``tensors`` one hop along the channel route, Pallas-lowered.
 
     The caller (Channel.put) owns the trace events; this function owns the
-    lowering branch choice.
+    lowering branch choice.  ``profile_src`` (the owning Channel, when a
+    runtime profiler is active) brackets the landing kernel's DMA
+    semaphore wait as its own span — the protocol cost on top of the
+    wire move (DESIGN.md §12).
     """
     tensors = tuple(tensors)
     on_tpu = jax.default_backend() == "tpu"
@@ -178,7 +183,19 @@ def deliver(
     # emulation branch: ppermute carries the bytes (keeping the HLO route
     # validatable), the landing kernel executes the semaphore protocol
     moved = tuple(lax.ppermute(t, axes, perm=list(perm)) for t in tensors)
-    return landing_copy(moved)
+    prof = _profiler.active()
+    meta = None
+    if prof is not None and profile_src is not None:
+        meta = prof.new_leg(
+            kind="comm", stream=profile_src.stream,
+            channel=f"{profile_src.name}.semwait", stage=profile_src.stage,
+            axes=tuple(axes), nbytes=_profiler.nbytes_of(tensors),
+            n_tensors=len(tensors), backend="pallas", intent="sem")
+        _profiler.mark(prof, meta, "issue", moved)
+    out = landing_copy(moved)
+    if meta is not None:
+        _profiler.mark(prof, meta, "signal", out)
+    return out
 
 
 def fused_transfer_events(

@@ -1,0 +1,260 @@
+"""Runtime span profiler for the comm runtime (DESIGN.md §12).
+
+trace.py validates the *intended* schedule at compile time (the HLO
+admits the overlap); this module measures what actually *executed*.  The
+technique: while a ``profile(profiler)`` context is active during
+tracing, every ``Channel.put``/``InFlight.wait`` (and the compute blocks
+ring/torus attention mark) inserts ``jax.debug.callback`` ops whose
+operands are cheap scalar slices of the leg's real tensors.  Each
+callback therefore acquires a data dependency on the event it observes:
+
+    issue   — depends on the put's INPUT tensors: fires once the operands
+              are ready and the transfer could start.
+    signal  — depends on the put's OUTPUT (the received buffer): fires
+              when the DMA has delivered, i.e. the flag write.
+    wait    — depends on the consumer-side ``wait(*deps)`` deps: fires
+              when the receiver finished its independent compute and
+              actually needs the buffer.
+
+At runtime the callbacks fire host-side in executed-schedule order and
+stamp ``time.perf_counter()``; ``lax.axis_index`` rides along so every
+event knows its device coordinates, giving one timeline per device even
+though the callbacks share a single host process (the CPU emulation
+mesh).  Timestamps are *observations of the executed schedule*, not
+in-graph barriers: the callbacks are unordered effects hanging off
+values the schedule already produces, so instrumentation does not
+serialize the overlap it measures (the residual host-callback cost is
+why ``--profile`` is opt-in).
+
+Exposure semantics per occurrence of a leg:
+
+    exposed = max(0, t_signal - t_wait)
+
+If the receiver hit its wait before the signal landed, the difference is
+the stall the schedule failed to hide; if the signal beat the wait, the
+leg was fully hidden.  ``emit_leg_spans`` drains paired events into
+``kind="span"`` metrics records (``comm.leg`` / ``comm.compute`` /
+``comm.exposed_wait``) that ``scripts/trace_report.py`` turns into
+Perfetto tracks, the overlap-efficiency table, and per-term NetworkModel
+residuals.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+import itertools
+import threading
+import time
+from typing import Any, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["CommProfiler", "LegEvent", "LegMeta", "active", "emit_leg_spans",
+           "mark", "mark_compute", "profile"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LegMeta:
+    """Trace-time identity of one instrumented leg.  One put (or compute
+    block) in the traced program mints one meta; a cached executable
+    re-running (jit calls, fori_loop iterations) produces many runtime
+    *occurrences* of the same leg, disambiguated when pairing."""
+
+    leg: int
+    kind: str  # "comm" | "compute"
+    stream: str
+    channel: str
+    stage: int
+    axes: tuple[str, ...]
+    nbytes: int
+    n_tensors: int
+    backend: str
+    intent: str  # ``overlaps`` label from the put ("" = not meant hidden)
+    label: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class LegEvent:
+    """One runtime callback firing: leg + phase + device coords + time."""
+
+    meta: LegMeta
+    phase: str  # "issue" | "signal" | "wait" | "start" | "end"
+    coords: tuple[int, ...]  # device index along meta.axes (-1 = unbound)
+    t: float  # raw time.perf_counter()
+
+
+class CommProfiler:
+    """Thread-safe event sink the inserted callbacks append into.  The
+    callbacks hold a reference to this instance, so recording works for
+    the whole life of the compiled executable — the ``profile`` context
+    only needs to be active while *tracing*."""
+
+    def __init__(self):
+        self.events: list[LegEvent] = []
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+
+    def new_leg(self, **kw: Any) -> LegMeta:
+        return LegMeta(leg=next(self._ids), **kw)
+
+    def _record(self, meta: LegMeta, phase: str, coords, *_toks) -> None:
+        # runs inside the XLA host-callback; must never raise
+        t = time.perf_counter()
+        try:
+            cs = tuple(int(c) for c in coords)
+        except Exception:
+            cs = ()
+        with self._lock:
+            self.events.append(LegEvent(meta, phase, cs, t))
+
+    def take(self) -> list[LegEvent]:
+        """Atomically drain the recorded events."""
+        with self._lock:
+            evs, self.events = self.events, []
+        return evs
+
+
+_ACTIVE: contextvars.ContextVar[CommProfiler | None] = contextvars.ContextVar(
+    "comm_profiler", default=None)
+
+
+def active() -> CommProfiler | None:
+    """The profiler instrumentation should insert callbacks into, if any."""
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def profile(profiler: CommProfiler) -> Iterator[CommProfiler]:
+    """Enable instrumentation for any tracing done inside the context."""
+    token = _ACTIVE.set(profiler)
+    try:
+        yield profiler
+    finally:
+        _ACTIVE.reset(token)
+
+
+def _coords(axes: Sequence[str]) -> jax.Array:
+    """Device coordinates along ``axes`` as one int32 vector; -1 where the
+    axis is not bound (eager execution outside shard_map)."""
+    out = []
+    for a in axes:
+        try:
+            out.append(jnp.int32(lax.axis_index(a)))
+        except Exception:
+            out.append(jnp.int32(-1))
+    return jnp.stack(out) if out else jnp.full((1,), -1, jnp.int32)
+
+
+def mark(prof: CommProfiler, meta: LegMeta, phase: str,
+         deps: Sequence[jax.Array]) -> None:
+    """Insert one observation callback that fires when ``deps`` are ready.
+    The callback operands are scalar slices, so the host copy is cheap and
+    the graph gains no ordering constraint beyond dep-availability."""
+    toks = [jnp.ravel(d)[0] for d in deps if getattr(d, "size", 0)]
+    jax.debug.callback(functools.partial(prof._record, meta, phase),
+                       _coords(meta.axes), *toks)
+
+
+def nbytes_of(tensors: Sequence[jax.Array]) -> int:
+    return sum(int(t.size) * t.dtype.itemsize for t in tensors)
+
+
+def mark_compute(label: str, axes: Sequence[str],
+                 start_deps: Sequence[jax.Array],
+                 end_deps: Sequence[jax.Array], *, stream: str = "") -> None:
+    """Bracket a compute block with start/end observations (no-op unless a
+    profiler is active at trace time).  ``start`` fires when the block's
+    inputs are ready — the earliest the compute *could* begin — and
+    ``end`` when its outputs exist; the span is therefore an upper bound
+    on the compute occupancy, which is the conservative side for overlap
+    claims (a comm leg inside it genuinely had compute available)."""
+    prof = active()
+    if prof is None:
+        return
+    meta = prof.new_leg(kind="compute", stream=stream, channel=label,
+                        stage=0, axes=tuple(axes),
+                        nbytes=nbytes_of(end_deps),
+                        n_tensors=len(end_deps), backend="", intent="",
+                        label=label)
+    mark(prof, meta, "start", start_deps)
+    mark(prof, meta, "end", end_deps)
+
+
+def _track(meta: LegMeta, coords: tuple[int, ...]) -> str:
+    """Perfetto track id for one device: 'pod=0,model=3'."""
+    if not coords or all(c < 0 for c in coords):
+        return "dev"
+    return ",".join(f"{a}={c}" for a, c in zip(meta.axes, coords))
+
+
+def emit_leg_spans(profiler: CommProfiler, tracker: Any) -> int:
+    """Drain the profiler and publish paired spans into ``tracker``
+    (``span_event``, t_start relative to ``tracker.epoch``).  Returns the
+    number of spans emitted.  Safe to call repeatedly (per batch)."""
+    events = profiler.take()
+    epoch = tracker.epoch
+
+    def rel(t: float) -> float:
+        # events recorded before the tracker existed clamp to its epoch
+        return max(t - epoch, 0.0)
+
+    groups: dict[tuple[int, tuple[int, ...]], list[LegEvent]] = {}
+    for ev in events:
+        groups.setdefault((ev.meta.leg, ev.coords), []).append(ev)
+    n = 0
+    for (leg, coords), evs in sorted(groups.items()):
+        evs.sort(key=lambda e: e.t)
+        meta = evs[0].meta
+        track = _track(meta, coords)
+        if meta.kind == "compute":
+            occ, start = 0, None
+            for ev in evs:
+                if ev.phase == "start":
+                    start = ev.t
+                elif ev.phase == "end" and start is not None:
+                    tracker.span_event(
+                        "comm.compute", rel(start),
+                        max(ev.t - start, 0.0),
+                        tags={"label": meta.label, "stream": meta.stream,
+                              "track": track, "leg": leg, "occ": occ})
+                    occ, start = occ + 1, None
+                    n += 1
+            continue
+        # comm leg: each "issue" starts a new occurrence
+        occs: list[dict[str, float]] = []
+        cur: dict[str, float] | None = None
+        for ev in evs:
+            if ev.phase == "issue":
+                cur = {"issue": ev.t}
+                occs.append(cur)
+            elif cur is not None and ev.phase not in cur:
+                cur[ev.phase] = ev.t
+        for occ_i, o in enumerate(occs):
+            if "signal" not in o:
+                continue
+            t0, t1 = o["issue"], o["signal"]
+            tags: dict[str, Any] = {
+                "stream": meta.stream, "channel": meta.channel,
+                "stage": meta.stage, "axes": ",".join(meta.axes),
+                "track": track, "leg": leg, "occ": occ_i,
+                "nbytes": meta.nbytes, "tensors": meta.n_tensors,
+                "backend": meta.backend, "intent": meta.intent}
+            if "wait" in o:
+                exposed = max(0.0, t1 - o["wait"])
+                tags["exposed_s"] = exposed
+                if exposed > 0:
+                    tracker.span_event(
+                        "comm.exposed_wait", rel(o["wait"]),
+                        exposed, tags={"stream": meta.stream,
+                                       "channel": meta.channel,
+                                       "track": track, "leg": leg,
+                                       "occ": occ_i})
+                    n += 1
+            tracker.span_event("comm.leg", rel(t0),
+                               max(t1 - t0, 0.0), tags=tags)
+            n += 1
+    return n

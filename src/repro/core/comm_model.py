@@ -154,6 +154,7 @@ def attention_layer_latency(
     exposed_intra = 0.0 if overlap_intra else t_intra
     exposed_inter = max(0.0, t_inter - t_comp) if overlap_inter else t_inter
     total = t_comp + exposed_inter + exposed_intra + t_sync + t_issue
+    hideable = t_inter + t_intra
     return {
         "t_compute": t_comp,
         "t_inter": t_inter,
@@ -161,6 +162,13 @@ def attention_layer_latency(
         "t_sync": t_sync,
         "t_issue": t_issue,
         "t_total": total,
+        "t_exposed_inter": exposed_inter,
+        "t_exposed_intra": exposed_intra,
+        # fraction of the layer's comm hidden behind compute (1.0 = fully
+        # overlapped / nothing to hide) — the modelled counterpart of the
+        # measured per-leg overlap efficiency (DESIGN.md §12)
+        "overlap_efficiency": (1.0 - (exposed_inter + exposed_intra)
+                               / hideable) if hideable > 0 else 1.0,
         "inter_elems": inter_v,
         "intra_elems": intra_v,
     }
@@ -216,6 +224,9 @@ def sp_step_latency(
     return {
         "t_step": branches * n_layers * lat["t_total"],
         "t_layer": lat["t_total"],
+        "t_compute_step": branches * n_layers * lat["t_compute"],
+        "t_issue_step": branches * n_layers * lat["t_issue"],
+        "overlap_efficiency": lat["overlap_efficiency"],
         "branches": float(branches),
         "inter_elems_step": branches * n_layers * lat["inter_elems"],
     }
@@ -271,12 +282,20 @@ def hybrid_step_latency(
                  + (net.inter_lat if hplan.cfg_inter else net.intra_lat))
     t_bubble = t_layers * (hplan.pp - 1) / (np_ * num_steps)
     total = t_layers + exposed_pp + t_cfg + t_bubble
+    layer_mult = branches * (n_layers / hplan.pp)
+    hideable = layer_mult * (lat["t_inter"] + lat["t_intra"]) + t_pp
+    exposed = (layer_mult * (lat["t_exposed_inter"]
+                             + lat["t_exposed_intra"]) + exposed_pp)
     return {
         "t_step": total,
         "t_layers": t_layers,
         "t_pp": t_pp,
         "t_cfg": t_cfg,
         "t_bubble": t_bubble,
+        "t_compute_step": layer_mult * lat["t_compute"],
+        "t_issue_step": layer_mult * lat["t_issue"],
+        "overlap_efficiency": (1.0 - exposed / hideable
+                               if hideable > 0 else 1.0),
         "branches": float(branches),
         "inter_elems_step": (branches * (n_layers / hplan.pp)
                              * lat["inter_elems"]

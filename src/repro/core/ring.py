@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..comm import Stream, fence, ring_shift
+from ..comm import profiler as _profiler
 from ..comm import trace as _trace
 from .collectives import GroupLayout
 from .softmax import (MaskSpec, Partial, attend_partial,
@@ -90,7 +91,13 @@ def ring_attention(
 
     _, my_r = layout.my_coords()
     if p_r == 1:
-        return merge(acc, _attend(q, k, v, mask_for(my_r)))
+        # pure-Ulysses plan: no ring rotation, but this local attend is
+        # still the compute the torus hops are scheduled to hide — mark it
+        # so per-stage traces stay complete for overlap accounting
+        out = merge(acc, _attend(q, k, v, mask_for(my_r)))
+        _profiler.mark_compute("local attend", layout.axes, (k, v),
+                               tuple(out), stream="ring")
+        return out
 
     stream = Stream("ring")
 
@@ -101,6 +108,8 @@ def ring_attention(
                          overlaps="ring attend")
         owner = (my_r - s) % p_r  # ring rank whose shard I currently hold
         acc = merge(acc, _attend(q, kc, vc, mask_for(owner)))
+        _profiler.mark_compute("ring attend", layout.axes, (kc, vc),
+                               tuple(acc), stream=stream.name)
         return (*nxt.payload, acc)
 
     if unroll:
@@ -119,12 +128,18 @@ def ring_attention(
             acc = Partial(*accs)
             owner = (my_r - s) % p_r
             acc = merge(acc, _attend(q, kc_g, vc_g, mask_for(owner)))
+            _profiler.mark_compute("ring attend", layout.axes,
+                                   (kc_g, vc_g), tuple(acc),
+                                   stream=stream.name)
             kc, vc = nxt.payload
     else:
         kc, vc, acc = lax.fori_loop(0, p_r - 1, body, (k, v, acc))
     # last step: compute only, no further transfer (2(P-1)/P volume, §2.2)
     owner = (my_r - (p_r - 1)) % p_r
-    return merge(acc, _attend(q, kc, vc, mask_for(owner)))
+    out = merge(acc, _attend(q, kc, vc, mask_for(owner)))
+    _profiler.mark_compute("ring attend", layout.axes, (kc, vc),
+                           tuple(out), stream=stream.name)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +220,8 @@ def _ring_attention_pallas(
                 qf, kc, vc, qpp, kpos_for(owner), group=group, scale=scale,
                 causal=causal, window=window, state=state, finalize=False,
                 block_q=bq, block_k=bk, interpret=interpret)
+        _profiler.mark_compute("ring attend", layout.axes, (kc, vc),
+                               (o, l, m), stream=stream.name)
         state = (o, l, m)
 
     o, l, m = state

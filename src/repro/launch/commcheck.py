@@ -23,14 +23,26 @@ serialises a put, a refactor that silently drops a transfer or fires a
 semaphore twice) fail fast.
 
     python -m repro.launch.commcheck
+
+``--profile trace.jsonl`` additionally EXECUTES the validated programs
+under the span profiler (DESIGN.md §12) and streams per-device comm-leg
+and compute spans to the given JSONL file — the measured counterpart of
+the intended schedules this gate validates statically.  Render with
+``scripts/trace_report.py``.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default=None, metavar="TRACE.JSONL",
+                    help="also execute the validated programs under the "
+                         "span profiler and write the trace here")
+    args = ap.parse_args()
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     flags = os.environ.get("XLA_FLAGS", "")
     if "host_platform_device_count" not in flags:
@@ -133,6 +145,29 @@ def main() -> int:
     for rep in reports:
         print(rep.summary())
         ok &= rep.ok
+
+    # --- 4. optional measured-schedule trace (DESIGN.md §12) ------------
+    if ok and args.profile is not None:
+        from ..serving import JsonlTracker
+        tracker = JsonlTracker(args.profile)
+        prof = comm.CommProfiler()
+        with comm.profile(prof):
+            # fresh lambdas: the profiler's callbacks are baked in at
+            # trace time, so the validated-but-unprofiled jits above are
+            # not reusable here
+            jax.block_until_ready(jax.jit(
+                lambda q, k, v: sp_attention(q, k, v, mesh=mesh, cfg=sp)
+            )(q, k, v))
+            jax.block_until_ready(jax.jit(
+                lambda q, k, v: sp_attention(q, k, v, mesh=mesh, cfg=psp)
+            )(q, k, v))
+        n = comm.emit_leg_spans(prof, tracker)
+        tracker.close()
+        print(f"profile: wrote {n} spans to {tracker.path} "
+              "(render with scripts/trace_report.py)")
+        if n == 0:
+            print("commcheck FAIL: profiled run produced no spans")
+            return 1
     return 0 if ok else 1
 
 

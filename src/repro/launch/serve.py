@@ -24,6 +24,13 @@ preemption, resync and recalibration streams to ``out.jsonl`` as
 schema-versioned records, and an end-of-run aggregate table is printed.
 A persistent sink opts the step loop into per-step timing even without
 ``--preempt``/``--recalibrate``.
+
+``--profile trace.jsonl`` (DESIGN.md §12) is ``--metrics`` plus the
+span-level comm-runtime profiler: per-device comm-leg and compute spans
+from inside the jitted step, host-side engine/plan-cache/calibration
+spans, all into the same JSONL stream.  Render it with
+``scripts/trace_report.py trace.jsonl --chrome trace.json`` (Perfetto
+timeline + overlap-efficiency table + comm-model residuals).
 """
 from __future__ import annotations
 
@@ -80,8 +87,15 @@ def main():
                     help="stream schema-versioned metrics records to this "
                          "JSONL file and print an end-of-run aggregate "
                          "table (DESIGN.md §11)")
+    ap.add_argument("--profile", default=None, metavar="TRACE.JSONL",
+                    help="--metrics plus the span-level comm-runtime "
+                         "profiler (DESIGN.md §12); render the trace with "
+                         "scripts/trace_report.py.  DiT only.")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
+    if args.profile is not None and args.metrics is not None:
+        ap.error("--profile already streams metrics records; "
+                 "give one output path, not both")
 
     if args.mesh == "host":
         mesh = make_host_mesh(model=args.model, data=args.data)
@@ -97,8 +111,11 @@ def main():
     sp = SPConfig(strategy=args.strategy if sp_degree > 1 else "full",
                   sp_axes=("model",), batch_axes=("data",))
 
-    tracker = (JsonlTracker(args.metrics) if args.metrics is not None
-               else Tracker())
+    sink = args.profile if args.profile is not None else args.metrics
+    tracker = JsonlTracker(sink) if sink is not None else Tracker()
+    if args.profile is not None and cfg.family != "dit":
+        ap.error("--profile instruments the DiT step loop; "
+                 "use a dit --arch")
     if cfg.family == "dit":
         control = ControlConfig(
             preemption=PreemptionPolicy() if args.preempt else None,
@@ -106,7 +123,8 @@ def main():
             forecast=args.forecast)
         srv = DiTServer(params, cfg, mesh, sp,
                         sampler=SamplerConfig(num_steps=args.steps),
-                        control=control, tracker=tracker)
+                        control=control, tracker=tracker,
+                        profile=args.profile is not None)
         lens = ([args.seq, args.seq // 2, args.seq * 2] if args.mixed
                 else [args.seq])
         for i in range(args.requests):
@@ -138,10 +156,13 @@ def main():
                                  max_new_tokens=8))
         for rid, toks in sorted(srv.serve().items()):
             print(f"request {rid}: -> {toks}")
-    if args.metrics is not None:
+    if sink is not None:
         tracker.close()
         print(f"\nmetrics: wrote {tracker.path} (schema {SCHEMA_VERSION})")
         print(tracker.format_summary())
+        if args.profile is not None:
+            print(f"profile: render with scripts/trace_report.py "
+                  f"{tracker.path} --chrome {tracker.path}.chrome.json")
 
 
 if __name__ == "__main__":

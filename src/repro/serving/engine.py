@@ -16,6 +16,7 @@ request can be bypassed indefinitely.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -25,6 +26,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from ..comm import CommProfiler, emit_leg_spans
+from ..comm import profile as comm_profile
 from ..configs.base import ModelConfig
 from ..core import SPConfig, plan_hybrid
 from ..core.comm_model import NetworkModel
@@ -125,11 +128,19 @@ class DiTServer:
                  drift: DriftPolicy | None = None,
                  net: NetworkModel | None = None,
                  control: ControlConfig | None = None,
-                 tracker: Tracker | None = None):
+                 tracker: Tracker | None = None,
+                 profile: bool = False):
         self.params = params
         self.cfg = cfg
         self.ctx = ParallelContext(mesh, sp, "prefill")
         self.sampler = sampler
+        # span-level runtime profiling (DESIGN.md §12): with ``profile``
+        # set, step compilation happens under a comm-profiler context (so
+        # every channel put/wait and marked compute block carries runtime
+        # observation callbacks), the step loop emits ``engine.step``
+        # spans, and each admission's device-side leg events are drained
+        # into the tracker as ``comm.*`` spans
+        self.profiler = CommProfiler() if profile else None
         # one metrics sink for the whole engine (DESIGN.md §11): the plan
         # cache, scheduler, calibrator and step loop all publish here.
         # The default aggregate-only Tracker keeps the legacy counter
@@ -346,22 +357,39 @@ class DiTServer:
         dt = 1.0 / sc.num_steps
         # a persistent sink (JSONL / recording) opts into the per-step
         # series even without the control loop: the wall-clock sync is
-        # the price of a trace worth shipping
-        measure = self.control.engaged or self.tracker.persistent
+        # the price of a trace worth shipping.  Profiling implies
+        # measurement — the step spans need the per-step clocks.
+        measure = (self.control.engaged or self.tracker.persistent
+                   or self.profiler is not None)
         step_tags = {"adm": adm_id, "seq": t, "rows": b}
         step_times: list[float] = []
         drift_vals = []
         resyncs = 0
 
-        def tick(i: int, outputs, t0: float) -> bool:
+        def tick(i: int, outputs, t0: float, warm=None) -> bool:
             """Post-step control point: stamp the step's wall clock, run
-            the instrumentation hook, then the preemption check."""
+            the instrumentation hook, then the preemption check.  The
+            clock stops at output-ready; span/metric emission happens
+            after it (the sampler satellite's contract, applied here
+            too)."""
             if measure:
                 jax.block_until_ready(outputs)
-                t_step = time.time() - t0
+                t_step = time.perf_counter() - t0
                 step_times.append(t_step)
                 self.tracker.log("engine.t_step_s", t_step, step=i,
                                  tags=step_tags)
+                if self.profiler is not None:
+                    tags = dict(step_tags)
+                    tags["pred_t_step_s"] = adm.plan.t_step
+                    if "t_compute_step" in adm.plan.pred:
+                        # lets trace_report attribute step drift to mfu
+                        tags["pred_compute_s"] = adm.plan.pred[
+                            "t_compute_step"]
+                    if warm is not None:
+                        tags["warm"] = bool(warm)
+                    self.tracker.span_event(
+                        "engine.step", t0 - self.tracker.epoch, t_step,
+                        step=i, tags=tags)
             if self.on_step is not None:
                 self.on_step(self, i)
             if self._should_park(adm, i, sc.num_steps, step_times):
@@ -369,43 +397,57 @@ class DiTServer:
                 return True
             return False
 
-        if sc.pipelined:
-            warm_fn, displaced_fn = fn
-            pipe = sc.pipeline
-            thresholds = [r.drift_threshold for r in batch]
-            use_drift = self.drift.engaged(thresholds)
-            state = hybrid_state_shape(self.cfg, b, t, sc)
-            last_drift: list[float] | None = None
-            for i in range(sc.num_steps):
-                if use_drift:
-                    warm = self.drift.warm(pipe, i, last_drift, thresholds,
-                                           tracker=self.tracker)
-                    if warm and i >= pipe.warmup_steps:
-                        resyncs += 1
-                        self.tracker.count("engine.resyncs",
-                                           tags={"seq": t})
-                else:
-                    warm = pipe.warm_step(i)
-                f = warm_fn if warm else displaced_fn
-                t0 = time.time()
-                x, state, m = f(self.params, x, cond,
-                                jnp.float32(1.0 - i * dt), state)
-                per = m["kv_drift_per_request"]
-                drift_vals.append(per)
-                if use_drift:
-                    # threshold-triggered resync needs the drift on the
-                    # host: one device sync per step, only when a bound is
-                    # actually configured (DESIGN.md §9)
-                    last_drift = [float(per[j]) for j in range(n_real)]
-                if tick(i, (x, state), t0):
-                    return []
-        else:
-            for i in range(sc.num_steps):
-                t0 = time.time()
-                x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
-                if tick(i, x, t0):
-                    return []
-        x.block_until_ready()
+        parked = False
+        prof_ctx = (comm_profile(self.profiler)
+                    if self.profiler is not None else contextlib.nullcontext())
+        with prof_ctx:
+            if sc.pipelined:
+                warm_fn, displaced_fn = fn
+                pipe = sc.pipeline
+                thresholds = [r.drift_threshold for r in batch]
+                use_drift = self.drift.engaged(thresholds)
+                state = hybrid_state_shape(self.cfg, b, t, sc)
+                last_drift: list[float] | None = None
+                for i in range(sc.num_steps):
+                    if use_drift:
+                        warm = self.drift.warm(pipe, i, last_drift,
+                                               thresholds,
+                                               tracker=self.tracker)
+                        if warm and i >= pipe.warmup_steps:
+                            resyncs += 1
+                            self.tracker.count("engine.resyncs",
+                                               tags={"seq": t})
+                    else:
+                        warm = pipe.warm_step(i)
+                    f = warm_fn if warm else displaced_fn
+                    t0 = time.perf_counter()
+                    x, state, m = f(self.params, x, cond,
+                                    jnp.float32(1.0 - i * dt), state)
+                    per = m["kv_drift_per_request"]
+                    drift_vals.append(per)
+                    if use_drift:
+                        # threshold-triggered resync needs the drift on the
+                        # host: one device sync per step, only when a bound
+                        # is actually configured (DESIGN.md §9)
+                        last_drift = [float(per[j]) for j in range(n_real)]
+                    if tick(i, (x, state), t0, warm=warm):
+                        parked = True
+                        break
+            else:
+                for i in range(sc.num_steps):
+                    t0 = time.perf_counter()
+                    x = fn(self.params, x, cond, jnp.float32(1.0 - i * dt))
+                    if tick(i, x, t0):
+                        parked = True
+                        break
+            if not parked:
+                x.block_until_ready()
+        if self.profiler is not None:
+            # pair and publish this admission's device-side leg events
+            # (comm.leg / comm.compute / comm.exposed_wait spans)
+            emit_leg_spans(self.profiler, self.tracker)
+        if parked:
+            return []
         now = time.time()
         if self.calibrator is not None and step_times:
             self.calibrator.observe(adm.plan, b, t, step_times)

@@ -42,6 +42,14 @@ Metric kinds:
   * ``log(name, value)``   — gauge / time-series sample (per-step wall
     clocks, drift trajectories, event markers).  ``step`` orders samples
     within a series; ``tags`` split series (bucket shape, admission id).
+  * ``span(name)`` / ``span_event(name, t_start, dur)`` — timed interval
+    (DESIGN.md §12): ``value`` is the duration in seconds, ``t_start``
+    the offset from the tracker's ``epoch``.  ``span`` is a context
+    manager that times a host region (nesting recorded via a ``parent``
+    tag); ``span_event`` publishes an interval measured elsewhere (the
+    comm profiler's drained device-side legs).  ``scripts/trace_report.py``
+    turns a span stream into a Perfetto timeline plus overlap/residual
+    reports.
 
 Everything is host-side pure Python — no jax — so the discrete-event
 simulation in ``benchmarks/sched_sweep.py`` publishes through the exact
@@ -49,15 +57,21 @@ sink type the real engine uses.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import pathlib
-from typing import IO, Any, Iterable, Mapping
+import time
+from typing import IO, Any, Iterable, Iterator, Mapping
 
 SCHEMA_VERSION = "metrics.v1"
 
-# record kinds a conforming stream may contain
-KINDS = ("counter", "gauge")
+# record kinds a conforming stream may contain.  "span" is the PR 7
+# extension (DESIGN.md §12): a timed interval — ``value`` is the duration
+# in seconds and ``t_start`` its offset from the tracker's epoch — and is
+# backward compatible: span-free streams are unchanged, and readers that
+# predate spans see a gauge-shaped record with one extra field.
+KINDS = ("counter", "gauge", "span")
 
 # a tag value must survive a JSON round-trip unchanged
 TagValue = str | int | float | bool
@@ -79,6 +93,9 @@ class Record:
     tags: dict[str, TagValue] = dataclasses.field(default_factory=dict)
     seq: int = 0
     schema: str = SCHEMA_VERSION
+    # spans only: start offset (seconds) from the tracker's epoch; the
+    # duration is ``value``.  None for counters/gauges.
+    t_start: float | None = None
 
     def to_dict(self) -> dict[str, Any]:
         d = {"schema": self.schema, "seq": self.seq, "name": self.name,
@@ -87,13 +104,16 @@ class Record:
             d["step"] = self.step
         if self.tags:
             d["tags"] = dict(self.tags)
+        if self.t_start is not None:
+            d["t_start"] = self.t_start
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "Record":
         return cls(name=d["name"], value=d["value"], kind=d["kind"],
                    step=d.get("step"), tags=dict(d.get("tags") or {}),
-                   seq=d["seq"], schema=d["schema"])
+                   seq=d["seq"], schema=d["schema"],
+                   t_start=d.get("t_start"))
 
 
 def validate_record(d: Mapping[str, Any]) -> list[str]:
@@ -128,7 +148,18 @@ def validate_record(d: Mapping[str, Any]) -> list[str]:
                 errs.append(f"tag key {k!r} is not a string")
             if not isinstance(v, (str, int, float, bool)):
                 errs.append(f"tag {k}={v!r} is not str/int/float/bool")
-    unknown = set(d) - {*_REQUIRED_FIELDS, "step", "tags"}
+    t_start = d.get("t_start")
+    if d["kind"] == "span":
+        if t_start is None:
+            errs.append("span record is missing t_start")
+        elif (not isinstance(t_start, (int, float))
+              or isinstance(t_start, bool) or t_start < 0):
+            errs.append(f"t_start {t_start!r} is not a non-negative number")
+        if isinstance(d["value"], (int, float)) and d["value"] < 0:
+            errs.append(f"span duration {d['value']!r} is negative")
+    elif t_start is not None:
+        errs.append(f"t_start is only valid on span records, not {d['kind']}")
+    unknown = set(d) - {*_REQUIRED_FIELDS, "step", "tags", "t_start"}
     if unknown:
         errs.append(f"unknown fields {sorted(unknown)}")
     return errs
@@ -172,6 +203,12 @@ class Tracker:
         self._counters: dict[tuple[str, tuple], float] = {}
         self._stats: dict[tuple[str, tuple], SeriesStats] = {}
         self._seq = 0
+        # span timebase: every t_start in this tracker's stream is an
+        # offset from this perf_counter reading, so spans from different
+        # components (host code, drained comm-profiler events) share one
+        # clock and the trace report never has to reconcile epochs.
+        self.epoch = time.perf_counter()
+        self._span_stack: list[str] = []
 
     # -- publishing -------------------------------------------------------
     def count(self, name: str, value: float = 1.0, *, step: int | None = None,
@@ -196,10 +233,51 @@ class Tracker:
         st.add(float(value))
         self._record(name, float(value), "gauge", step, tags)
 
+    def now(self) -> float:
+        """Seconds since this tracker's epoch — the span timebase."""
+        return time.perf_counter() - self.epoch
+
+    def span_event(self, name: str, t_start: float, dur: float, *,
+                   step: int | None = None,
+                   tags: Mapping[str, TagValue] | None = None) -> None:
+        """Publish one already-measured span: ``t_start`` is seconds since
+        ``self.epoch`` (use ``now()``), ``dur`` the duration in seconds.
+        Durations aggregate into the same per-series stats as gauges, so
+        ``summary()`` shows span timing tables for free."""
+        key = (name, _tag_key(tags))
+        st = self._stats.get(key)
+        if st is None:
+            st = self._stats[key] = SeriesStats()
+        st.add(float(dur))
+        self._record(name, float(dur), "span", step, tags,
+                     t_start=float(t_start))
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, step: int | None = None,
+             tags: Mapping[str, TagValue] | None = None) -> Iterator[None]:
+        """Time a host-side region as a span record.  Nested spans get a
+        ``parent`` tag automatically (unless the caller sets one), which
+        is how ``scripts/trace_report.py`` rebuilds the step→stage tree.
+        The record is emitted even if the body raises, so a crashed
+        step's partial timing still lands in the stream."""
+        t0 = self.now()
+        tags = dict(tags) if tags else {}
+        if self._span_stack and "parent" not in tags:
+            tags["parent"] = self._span_stack[-1]
+        self._span_stack.append(name)
+        try:
+            yield
+        finally:
+            self._span_stack.pop()
+            self.span_event(name, t0, self.now() - t0, step=step,
+                            tags=tags or None)
+
     def _record(self, name: str, value: float, kind: str,
-                step: int | None, tags: Mapping[str, TagValue] | None) -> None:
+                step: int | None, tags: Mapping[str, TagValue] | None, *,
+                t_start: float | None = None) -> None:
         rec = Record(name=name, value=value, kind=kind, step=step,
-                     tags=dict(tags) if tags else {}, seq=self._seq)
+                     tags=dict(tags) if tags else {}, seq=self._seq,
+                     t_start=t_start)
         self._seq += 1
         self._emit(rec)
 
@@ -279,6 +357,13 @@ class NullTracker(Tracker):
     def log(self, name: str, value: float, *, step=None, tags=None) -> None:
         pass
 
+    def span_event(self, name, t_start, dur, *, step=None, tags=None) -> None:
+        pass
+
+    @contextlib.contextmanager
+    def span(self, name, *, step=None, tags=None):
+        yield
+
 
 class RecordingTracker(Tracker):
     """In-memory sink for tests: full record stream + the aggregates."""
@@ -295,13 +380,22 @@ class RecordingTracker(Tracker):
 
 class JsonlTracker(Tracker):
     """Streams every record to ``path`` as one JSON line (sorted keys, so
-    byte output is deterministic given the record stream).  The file is
-    line-buffered valid JSONL at every point — a crashed run's trace is
-    readable up to its last completed record."""
+    byte output is deterministic given the record stream).
 
-    def __init__(self, path: str | pathlib.Path):
+    Crash safety: by default every record is flushed to the OS as soon as
+    it is written (``flush_every=1``), so a run killed mid-serve leaves a
+    trace whose completed lines are all readable and schema-valid — at
+    worst the final line is truncated (``read_jsonl(partial_tail="drop")``
+    recovers everything before it).  Raise ``flush_every`` to amortize
+    the flush for high-rate span streams; the tracker still flushes on
+    ``close()``, and the context-manager protocol closes on exception."""
+
+    def __init__(self, path: str | pathlib.Path, *, flush_every: int = 1):
         super().__init__()
+        assert flush_every >= 1, f"flush_every must be >= 1, got {flush_every}"
         self.path = pathlib.Path(path)
+        self.flush_every = flush_every
+        self._since_flush = 0
         self._fh: IO[str] | None = self.path.open("w")
 
     persistent = True
@@ -309,10 +403,15 @@ class JsonlTracker(Tracker):
     def _emit(self, rec: Record) -> None:
         assert self._fh is not None, "JsonlTracker is closed"
         self._fh.write(json.dumps(rec.to_dict(), sort_keys=True) + "\n")
+        self._since_flush += 1
+        if self._since_flush >= self.flush_every:
+            self._fh.flush()
+            self._since_flush = 0
 
     def flush(self) -> None:
         if self._fh is not None:
             self._fh.flush()
+            self._since_flush = 0
 
     def close(self) -> None:
         if self._fh is not None:
@@ -320,15 +419,24 @@ class JsonlTracker(Tracker):
             self._fh = None
 
 
-def read_jsonl(path: str | pathlib.Path,
-               validate: bool = True) -> list[Record]:
+def read_jsonl(path: str | pathlib.Path, validate: bool = True,
+               partial_tail: str = "error") -> list[Record]:
     """Load a JSONL trace back into ``Record`` objects (the round-trip
-    inverse of ``JsonlTracker``); ``validate`` schema-checks every line."""
+    inverse of ``JsonlTracker``); ``validate`` schema-checks every line.
+    ``partial_tail="drop"`` tolerates a truncated FINAL line (a crashed
+    writer) — corruption anywhere else still raises."""
+    assert partial_tail in ("error", "drop"), partial_tail
     records = []
-    for i, line in enumerate(pathlib.Path(path).read_text().splitlines()):
+    lines = pathlib.Path(path).read_text().splitlines()
+    for i, line in enumerate(lines):
         if not line.strip():
             continue
-        d = json.loads(line)
+        try:
+            d = json.loads(line)
+        except json.JSONDecodeError:
+            if partial_tail == "drop" and i == len(lines) - 1:
+                break
+            raise
         if validate:
             errs = validate_record(d)
             if errs:

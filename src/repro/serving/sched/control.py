@@ -218,9 +218,14 @@ class OnlineCalibrator:
         if len(self.obs) < c.min_samples or self._since_refit < c.refit_every:
             return False
         self._since_refit = 0
-        self.net, _report = calibration.fit(
-            self.obs, self._predict_us, start=self.net, iters=c.iters,
-            damping=c.damping)
+        # the refit is a host-timeline span: Gauss-Newton iterations are
+        # real milliseconds between steps, and the profiler report should
+        # attribute them to the control loop, not the sampler (§12)
+        with self.tracker.span("calibration.refit",
+                               tags={"samples": len(self.obs)}):
+            self.net, _report = calibration.fit(
+                self.obs, self._predict_us, start=self.net, iters=c.iters,
+                damping=c.damping)
         refit_no = int(self.tracker.count("calibration.refits"))
         self.last_ratios = fit_param_ratios(self.net, self.plans.net)
         for param, r in self.last_ratios.items():

@@ -180,7 +180,11 @@ class PlanCache:
             self.tracker.count("plan_cache.step_hit", tags=tags)
         else:
             self.tracker.count("plan_cache.step_miss", tags=tags)
-            self._steps[key] = build()
+            # the build (trace + compile) is a span: bucket switches show
+            # up on the host timeline as plan_cache.trace blocks, making
+            # compile stalls distinguishable from slow steps (§12)
+            with self.tracker.span("plan_cache.trace", tags=tags):
+                self._steps[key] = build()
         return self._steps[key]
 
     @property

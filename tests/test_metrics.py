@@ -395,3 +395,128 @@ def test_forecaster_publishes_gap_series():
     assert t.series("forecast.mean_gap_s", {"seq": 256}).n == 2
     assert t.series("forecast.mean_gap_s", {"seq": 256}).last == \
         pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# (f) span records (DESIGN.md §12): schema, nesting, crash safety
+# ---------------------------------------------------------------------------
+
+def test_span_event_record_shape():
+    t = RecordingTracker()
+    t.span_event("comm.leg", 0.25, 0.005, step=3, tags={"stream": "ring"})
+    (r,) = t.records
+    assert (r.kind, r.name, r.step) == ("span", "comm.leg", 3)
+    assert r.t_start == pytest.approx(0.25)
+    assert r.value == pytest.approx(0.005)
+    assert validate_record(r.to_dict()) == []
+    # durations aggregate like gauges, so summary() covers spans for free
+    assert t.series("comm.leg", {"stream": "ring"}).n == 1
+    # round-trips with t_start intact
+    assert Record.from_dict(r.to_dict()) == r
+
+
+def test_span_context_manager_times_and_nests():
+    t = RecordingTracker()
+    with t.span("engine.step", step=0):
+        with t.span("plan_cache.trace", tags={"rows": 2}):
+            pass
+    inner, outer = t.records
+    assert inner.name == "plan_cache.trace"
+    assert inner.tags["parent"] == "engine.step"  # nesting is recorded
+    assert outer.name == "engine.step" and "parent" not in outer.tags
+    # the inner window is contained in the outer one
+    assert outer.t_start <= inner.t_start
+    assert inner.t_start + inner.value <= outer.t_start + outer.value + 1e-9
+    for r in t.records:
+        assert validate_record(r.to_dict()) == []
+
+
+def test_span_emitted_even_on_exception():
+    t = RecordingTracker()
+    with pytest.raises(RuntimeError):
+        with t.span("engine.step"):
+            raise RuntimeError("boom")
+    assert [r.name for r in t.records] == ["engine.step"]
+    assert t._span_stack == []  # stack unwound
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.pop("t_start"), "t_start"),
+    (lambda d: d.update(t_start=-0.5), "t_start"),
+    (lambda d: d.update(t_start=True), "t_start"),
+    (lambda d: d.update(value=-1.0), "negative"),
+])
+def test_validate_record_rejects_malformed_spans(mutate, needle):
+    d = Record(name="s", value=1.0, kind="span", seq=0, t_start=0.0).to_dict()
+    mutate(d)
+    errs = validate_record(d)
+    assert errs and any(needle in e for e in errs), errs
+
+
+def test_t_start_forbidden_on_non_span_kinds():
+    d = Record(name="g", value=1.0, kind="gauge", seq=0).to_dict()
+    d["t_start"] = 0.5
+    assert any("span" in e for e in validate_record(d))
+
+
+def test_null_tracker_span_noop():
+    t = NullTracker()
+    with t.span("x"):
+        t.span_event("y", 0.0, 1.0)
+    assert t.series("y").n == 0
+
+
+def test_jsonl_crash_tail_recoverable(tmp_path):
+    """A writer killed mid-record leaves a trace whose completed lines are
+    all schema-valid; read_jsonl(partial_tail='drop') recovers them."""
+    p = tmp_path / "t.jsonl"
+    t = JsonlTracker(p)  # flush_every=1: every record hits the OS at once
+    t.count("a", 1)
+    with t.span("s"):
+        pass
+    t.log("g", 2.0)
+    # crash simulation: truncate the final record mid-line, no close()
+    t.flush()
+    raw = p.read_bytes()
+    p.write_bytes(raw[:-9])  # cut into the last JSON line
+    for line in p.read_text().splitlines()[:-1]:
+        assert validate_record(json.loads(line)) == []
+    with pytest.raises(json.JSONDecodeError):
+        read_jsonl(p)  # default: corruption is an error
+    recs = read_jsonl(p, partial_tail="drop")
+    assert [r.name for r in recs] == ["a", "s"]
+    assert recs[1].kind == "span"
+    t.close()
+
+
+def test_jsonl_flush_every_batches_but_close_flushes(tmp_path):
+    p = tmp_path / "t.jsonl"
+    t = JsonlTracker(p, flush_every=100)
+    t.count("a", 1)
+    t.count("a", 1)
+    # unflushed: the OS may have nothing yet (can't assert emptiness
+    # portably, but flush() must make both lines visible)
+    t.flush()
+    assert len(p.read_text().splitlines()) == 2
+    t.count("a", 1)
+    t.close()
+    assert len(read_jsonl(p)) == 3
+
+
+def test_jsonl_closes_on_exception(tmp_path):
+    p = tmp_path / "t.jsonl"
+    with pytest.raises(RuntimeError):
+        with JsonlTracker(p, flush_every=1000) as t:
+            t.count("a", 1)
+            raise RuntimeError("serve crashed")
+    assert t._fh is None  # context manager closed (and thus flushed) it
+    assert [r.name for r in read_jsonl(p)] == ["a"]
+
+
+def test_partial_tail_drop_does_not_mask_mid_file_corruption(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    good = json.dumps(Record(name="n", value=1.0, kind="gauge",
+                             seq=0).to_dict(), sort_keys=True)
+    p.write_text('{"truncated' + "\n" + good + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        read_jsonl(p, partial_tail="drop")

@@ -1,0 +1,170 @@
+"""Comm-runtime span profiler (repro.comm.profiler, DESIGN.md §12):
+host-side unit tests of the event sink, the issue/signal/wait pairing,
+and the span emission — synthetic ``LegEvent`` streams, no mesh.  The
+instrumented end-to-end runs live in tests/multidevice/test_profile_e2e.py.
+"""
+import pytest
+
+from repro.comm.profiler import (
+    CommProfiler,
+    LegEvent,
+    active,
+    emit_leg_spans,
+    mark_compute,
+    profile,
+)
+from repro.serving.metrics import RecordingTracker, validate_record
+
+
+def _comm_meta(prof, **kw):
+    base = dict(kind="comm", stream="ring", channel="ring.shift1", stage=0,
+                axes=("pod", "model"), nbytes=2048, n_tensors=2,
+                backend="xla", intent="ring attend")
+    base.update(kw)
+    return prof.new_leg(**base)
+
+
+def _ev(meta, phase, coords, t):
+    return LegEvent(meta, phase, coords, t)
+
+
+def _fresh_tracker():
+    t = RecordingTracker()
+    t.epoch = 0.0  # synthetic event times below are absolute-from-zero
+    return t
+
+
+# ---------------------------------------------------------------------------
+# sink mechanics
+# ---------------------------------------------------------------------------
+
+def test_profile_context_sets_and_restores_active():
+    assert active() is None
+    p = CommProfiler()
+    with profile(p) as got:
+        assert got is p and active() is p
+        with profile(CommProfiler()) as inner:
+            assert active() is inner
+        assert active() is p
+    assert active() is None
+
+
+def test_new_leg_ids_monotone_and_record_never_raises():
+    p = CommProfiler()
+    a = _comm_meta(p)
+    b = _comm_meta(p, channel="torus.hop1")
+    assert (a.leg, b.leg) == (0, 1)
+    p._record(a, "issue", [0, 1])
+    p._record(a, "signal", object())  # uncoercible coords must not raise
+    assert [e.coords for e in p.events] == [(0, 1), ()]
+
+
+def test_take_drains_atomically():
+    p = CommProfiler()
+    m = _comm_meta(p)
+    p._record(m, "issue", [0])
+    assert len(p.take()) == 1
+    assert p.take() == [] and p.events == []
+
+
+def test_mark_compute_is_noop_without_active_profiler():
+    # no profiler active: must not touch jax at all (host-side early out)
+    mark_compute("attend", ("model",), [], [])
+
+
+# ---------------------------------------------------------------------------
+# pairing + span emission
+# ---------------------------------------------------------------------------
+
+def test_comm_leg_pairing_and_exposure():
+    p = CommProfiler()
+    m = _comm_meta(p)
+    # occurrence 0: signal lands BEFORE the consumer waits (fully hidden);
+    # occurrence 1: the wait beats the signal by 3ms (exposed stall)
+    p.events = [
+        _ev(m, "issue", (0, 1), 1.000),
+        _ev(m, "signal", (0, 1), 1.010),
+        _ev(m, "wait", (0, 1), 1.020),
+        _ev(m, "issue", (0, 1), 2.000),
+        _ev(m, "wait", (0, 1), 2.005),
+        _ev(m, "signal", (0, 1), 2.008),
+    ]
+    t = _fresh_tracker()
+    n = emit_leg_spans(p, t)
+    legs = [r for r in t.records if r.name == "comm.leg"]
+    stalls = [r for r in t.records if r.name == "comm.exposed_wait"]
+    assert n == len(legs) + len(stalls) == 3
+    assert [r.tags["occ"] for r in legs] == [0, 1]
+    assert legs[0].tags["exposed_s"] == 0.0
+    assert legs[0].t_start == pytest.approx(1.0)
+    assert legs[0].value == pytest.approx(0.010)
+    assert legs[1].tags["exposed_s"] == pytest.approx(0.003)
+    (stall,) = stalls
+    assert stall.t_start == pytest.approx(2.005)
+    assert stall.value == pytest.approx(0.003)
+    assert stall.tags["track"] == "pod=0,model=1"
+    for r in t.records:
+        assert validate_record(r.to_dict()) == []
+    # drained: a second emit publishes nothing
+    assert emit_leg_spans(p, t) == 0
+
+
+def test_unsignaled_occurrence_dropped():
+    """A leg whose signal never fired (crash mid-step) emits no span —
+    half-pairs must not fabricate durations."""
+    p = CommProfiler()
+    m = _comm_meta(p)
+    p.events = [_ev(m, "issue", (0, 0), 1.0),
+                _ev(m, "issue", (0, 0), 2.0),
+                _ev(m, "signal", (0, 0), 2.1)]
+    t = _fresh_tracker()
+    assert emit_leg_spans(p, t) == 1
+    (leg,) = [r for r in t.records if r.name == "comm.leg"]
+    assert leg.t_start == pytest.approx(2.0)
+
+
+def test_per_device_timelines_are_separate():
+    """The same trace-time leg on two devices pairs independently and
+    lands on distinct Perfetto tracks."""
+    p = CommProfiler()
+    m = _comm_meta(p)
+    p.events = [
+        _ev(m, "issue", (0, 0), 1.00), _ev(m, "issue", (0, 1), 1.01),
+        _ev(m, "signal", (0, 1), 1.02), _ev(m, "signal", (0, 0), 1.03),
+    ]
+    t = _fresh_tracker()
+    assert emit_leg_spans(p, t) == 2
+    tracks = {r.tags["track"]: r.value for r in t.records}
+    assert tracks["pod=0,model=0"] == pytest.approx(0.03)
+    assert tracks["pod=0,model=1"] == pytest.approx(0.01)
+
+
+def test_compute_block_pairing():
+    p = CommProfiler()
+    m = p.new_leg(kind="compute", stream="ring", channel="ring attend",
+                  stage=0, axes=("model",), nbytes=0, n_tensors=0,
+                  backend="", intent="", label="ring attend")
+    p.events = [_ev(m, "start", (2,), 1.0), _ev(m, "end", (2,), 1.5),
+                _ev(m, "start", (2,), 2.0), _ev(m, "end", (2,), 2.25),
+                _ev(m, "end", (2,), 3.0)]  # end without start: ignored
+    t = _fresh_tracker()
+    assert emit_leg_spans(p, t) == 2
+    assert all(r.name == "comm.compute" for r in t.records)
+    assert [r.value for r in t.records] == pytest.approx([0.5, 0.25])
+    assert [r.tags["occ"] for r in t.records] == [0, 1]
+    assert all(r.tags["label"] == "ring attend" for r in t.records)
+
+
+def test_pre_epoch_events_clamp_to_zero():
+    """Events recorded before the tracker's epoch (profiler outlives the
+    sink) clamp to t_start=0 instead of emitting schema-invalid negative
+    offsets."""
+    p = CommProfiler()
+    m = _comm_meta(p)
+    p.events = [_ev(m, "issue", (0, 0), 1.0), _ev(m, "signal", (0, 0), 1.2)]
+    t = RecordingTracker()
+    t.epoch = 5.0  # epoch after every event
+    assert emit_leg_spans(p, t) == 1
+    (leg,) = t.records
+    assert leg.t_start == 0.0
+    assert validate_record(leg.to_dict()) == []

@@ -1,0 +1,209 @@
+"""scripts/trace_report.py (DESIGN.md §12): Chrome trace rendering,
+overlap-efficiency accounting, NetworkModel residual attribution, and the
+--check gate — against synthetic span streams plus the checked-in fixture
+(tests/data/span_trace_fixture.jsonl, a real ``commcheck --profile``
+capture on the 8-fake-device mesh)."""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+from repro.core.comm_model import NetworkModel
+from repro.serving.metrics import JsonlTracker, RecordingTracker
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIXTURE = ROOT / "tests" / "data" / "span_trace_fixture.jsonl"
+
+_spec = importlib.util.spec_from_file_location(
+    "trace_report", ROOT / "scripts" / "trace_report.py")
+tr = importlib.util.module_from_spec(_spec)
+sys.modules["trace_report"] = tr
+_spec.loader.exec_module(tr)
+
+
+def _span(t, name, t0, dur, **tags):
+    t.span_event(name, t0, dur, tags=tags or None)
+
+
+def _synthetic():
+    """One device track with a hidden leg, an exposed leg, and a compute
+    block; one host engine.step span carrying model predictions."""
+    t = RecordingTracker()
+    t.epoch = 0.0
+    dev = "pod=0,model=1"
+    _span(t, "comm.compute", 1.00, 0.10, label="ring attend",
+          stream="ring", track=dev, leg=5, occ=0)
+    # fully hidden: runs inside the compute block, no stall
+    _span(t, "comm.leg", 1.02, 0.04, stream="ring", channel="ring.shift1",
+          stage=0, axes="pod,model", track=dev, leg=0, occ=0, nbytes=1 << 20,
+          tensors=2, backend="xla", intent="ring attend", exposed_s=0.0)
+    # half exposed: 20ms of its 40ms stalled the consumer
+    _span(t, "comm.leg", 2.00, 0.04, stream="torus", channel="torus.hop1",
+          stage=0, axes="pod", track=dev, leg=1, occ=0, nbytes=1 << 20,
+          tensors=1, backend="xla", intent="gathered-Q attend",
+          exposed_s=0.02)
+    _span(t, "comm.exposed_wait", 2.02, 0.02, stream="torus",
+          channel="torus.hop1", track=dev, leg=1, occ=0)
+    with t.span("engine.step", step=0,
+                tags={"pred_t_step_s": 0.5, "pred_compute_s": 0.25}):
+        pass
+    recs = list(t.records)
+    # give the host step a real window for nesting/overlap math
+    step = recs[-1]
+    recs[-1] = type(step)(name=step.name, value=1.0, kind="span",
+                          step=step.step, tags=step.tags, seq=step.seq,
+                          t_start=0.5)
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# chrome trace
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_structure():
+    spans = _synthetic()
+    c = tr.chrome_trace(spans)
+    xs = [e for e in c["traceEvents"] if e["ph"] == "X"]
+    metas = [e for e in c["traceEvents"] if e["ph"] == "M"]
+    assert len(xs) == len(spans)
+    # host track exists and is tid 0; the device track has its own tid
+    names = {e["args"]["name"] for e in metas if e["name"] == "thread_name"}
+    assert names == {"host", "pod=0,model=1"}
+    host_tid = next(e["tid"] for e in metas
+                    if e["name"] == "thread_name"
+                    and e["args"]["name"] == "host")
+    assert host_tid == 0
+    # µs timebase; display names come from channel/label tags
+    leg = next(e for e in xs if e["name"] == "ring.shift1")
+    assert leg["ts"] == pytest.approx(1.02e6)
+    assert leg["dur"] == pytest.approx(0.04e6)
+    assert leg["cat"] == "comm"
+    assert {e["name"] for e in xs} >= {"ring attend", "torus.hop1",
+                                       "engine.step"}
+    json.dumps(c)  # serializable
+
+
+# ---------------------------------------------------------------------------
+# overlap table
+# ---------------------------------------------------------------------------
+
+def test_overlap_table_measured_vs_intended():
+    rows = {(r["stream"], r["channel"]): r
+            for r in tr.overlap_table(_synthetic())}
+    ring = rows[("ring", "ring.shift1")]
+    assert ring["hidden_frac"] == pytest.approx(1.0)
+    assert ring["intended_hidden"] is True
+    # the whole leg ran under the marked compute block
+    assert ring["compute_overlap_frac"] == pytest.approx(1.0)
+    torus = rows[("torus", "torus.hop1")]
+    assert torus["hidden_frac"] == pytest.approx(0.5)  # 20ms of 40ms stalled
+    assert torus["intended_hidden"] is True
+    assert torus["compute_overlap_frac"] == pytest.approx(0.0)
+    text = tr.format_overlap(list(rows.values()))
+    assert "ring/ring.shift1/s0" in text
+
+
+def test_sem_intent_not_counted_as_intended():
+    t = RecordingTracker()
+    t.epoch = 0.0
+    _span(t, "comm.leg", 1.0, 0.01, stream="torus",
+          channel="torus.hop1.semwait", stage=0, axes="pod", track="d",
+          leg=0, occ=0, nbytes=8, tensors=1, backend="pallas", intent="sem")
+    (row,) = tr.overlap_table(t.records)
+    assert row["intended_hidden"] is False
+
+
+# ---------------------------------------------------------------------------
+# residuals
+# ---------------------------------------------------------------------------
+
+def test_leg_residuals_classify_and_attribute():
+    net = NetworkModel()
+    res = {(r["stream"], r["channel"]): r
+           for r in tr.leg_residuals(_synthetic(), net,
+                                     inter_axes=frozenset({"pod"}))}
+    # axes "pod,model" touches pod => inter; pure-"pod" leg too
+    ring = res[("ring", "ring.shift1")]
+    assert ring["cls"] == "inter" and ring["bw_term"] == "inter_bw"
+    meas = ring["measured_us"] / 1e6
+    pred = (1 << 20) / net.inter_bw + net.inter_lat + net.step_issue_overhead
+    assert ring["predicted_us"] == pytest.approx(pred * 1e6)
+    assert ring["ratio"] == pytest.approx(meas / pred)
+    # implied bw: the bytes over whatever time is left after model overhead
+    wire = meas - net.inter_lat - net.step_issue_overhead
+    assert ring["implied_bw"] == pytest.approx((1 << 20) / wire)
+    text = tr.format_residuals(list(res.values()),
+                               tr.step_residuals(_synthetic(), net), net)
+    assert "inter_bw" in text
+
+
+def test_step_residuals_from_engine_tags():
+    net = NetworkModel()
+    step = tr.step_residuals(_synthetic(), net)
+    assert step["n_steps"] == 1
+    assert step["measured_step_s"] == pytest.approx(1.0)
+    assert step["pred_step_s"] == pytest.approx(0.5)
+    assert step["step_ratio"] == pytest.approx(2.0)
+    # one compute span of 0.1s on one track, one step
+    assert step["measured_compute_s"] == pytest.approx(0.10)
+    assert step["implied_mfu"] == pytest.approx(net.mfu * 0.25 / 0.10)
+    assert tr.step_residuals([], net) is None
+
+
+# ---------------------------------------------------------------------------
+# --check gate
+# ---------------------------------------------------------------------------
+
+def test_check_passes_on_good_trace():
+    spans = _synthetic()
+    assert tr.check_trace(spans, tr.chrome_trace(spans)) == []
+
+
+def test_check_flags_missing_overlap_and_bad_nesting():
+    t = RecordingTracker()
+    t.epoch = 0.0
+    _span(t, "comm.leg", 1.0, 0.01, stream="r", channel="c", stage=0,
+          axes="pod", track="d", leg=0, occ=0, nbytes=8, tensors=1,
+          backend="xla", intent="")
+    _span(t, "comm.compute", 5.0, 0.01, label="x", stream="r", track="d",
+          leg=1, occ=0)  # disjoint from the leg
+    _span(t, "plan_cache.trace", 9.0, 0.01, parent="engine.step")  # orphan
+    errs = tr.check_trace(t.records, tr.chrome_trace(t.records))
+    assert any("overlap" in e for e in errs)
+    assert any("nested" in e for e in errs)
+    assert tr.check_trace([], {}) == ["trace contains no span records"]
+
+
+# ---------------------------------------------------------------------------
+# the checked-in fixture end to end
+# ---------------------------------------------------------------------------
+
+def test_fixture_trace_renders_and_checks(tmp_path):
+    spans = tr.load_spans(FIXTURE)
+    assert spans, "fixture is empty"
+    chrome = tr.chrome_trace(spans)
+    assert tr.check_trace(spans, chrome) == []
+    rows = tr.overlap_table(spans)
+    assert rows and any(r["intended_hidden"] for r in rows)
+    # the pallas landing-protocol spans ride along in the fixture
+    assert any(r["backend"] == "pallas" for r in rows)
+    res = tr.leg_residuals(spans, NetworkModel(), frozenset({"pod"}))
+    assert res and all(r["measured_us"] > 0 for r in res)
+    # main() end to end (writes chrome, prints tables, --check passes)
+    out = tmp_path / "chrome.json"
+    tr.main([str(FIXTURE), "--chrome", str(out), "--check"])
+    assert json.loads(out.read_text())["traceEvents"]
+
+
+def test_load_spans_tolerates_truncated_tail(tmp_path):
+    p = tmp_path / "t.jsonl"
+    t = JsonlTracker(p)
+    t.span_event("comm.leg", 0.0, 1.0, tags={"stream": "r", "channel": "c"})
+    t.flush()
+    with p.open("a") as fh:
+        fh.write('{"kind": "span", "name": "cut')  # crashed writer
+    t.close()
+    (r,) = tr.load_spans(p)
+    assert r.name == "comm.leg"
