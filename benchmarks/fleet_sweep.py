@@ -1,0 +1,285 @@
+"""Fleet-router sweep (DESIGN.md §13): multi-replica SLA-aware dispatch
+policies over the seeded sched_sweep arrival streams, with replica
+failure/drain injected.
+
+Extends ``benchmarks/sched_sweep.py``'s discrete-event simulation one
+tier up: each replica is a full PR-3/5 scheduler stack (bucketer,
+admission, plan cache, forecaster) on the paper testbed flavour (N=2
+machines x M=4 devices, dp=2), and a ``FleetRouter`` dispatches the
+global stream across R of them.  Router state is fed EXCLUSIVELY by
+folded per-replica ``metrics.v1`` tracker traces (``TraceFold`` over
+``read_jsonl`` / recorded streams, period ``FleetConfig.ship_every``) —
+never by reaching into a replica's scheduler — so every policy decides
+on exactly the information a cross-host router would have.
+
+Policies swept (serving/fleet.py): ``round_robin`` (baseline),
+``least_loaded`` (folded queue-depth gauge + unshipped ledger),
+``warmth`` (resolution-band affinity to warm plan caches, least-queue
+spill under pressure), ``sla`` (warmth + elastic repartition from the
+folded per-bucket ``ArrivalForecaster`` rates).  Scenarios: the seeded
+``bursty`` mixed-resolution stream, the same stream with a replica
+FAILURE injected mid-burst (queue evacuated, router re-dispatch with
+age intact), and the ``diurnal`` stream with a replica DRAIN (serves
+out, no dispatch) — all deterministic, no wall clock anywhere.
+
+The headline claim mirrors the plan-cache economics: batches stall
+``TRACE_COST_S`` the first time a replica runs a bucket shape, so
+round_robin interleaves both resolution bands onto both replicas (tight
+256-burst SLAs queue behind ~30 ms 1024 batches and every replica
+compiles every shape) while warm-cache affinity pins each band to its
+home replica — higher SLA-met fraction on fewer jit traces.  ``--smoke``
+asserts that uplift (with the failure injected), that every request is
+served under failover, and the fold-sum invariant (router counter totals
+equal the per-replica sums).  ``--trace-dir`` retains the per-replica
+JSONL traces and the router's folded trace for
+``scripts/check_metrics_schema.py``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import pathlib
+import sys
+import tempfile
+
+from repro.serving.fleet import (
+    POLICIES,
+    FailureEvent,
+    FleetRouter,
+    Replica,
+    run_fleet,
+)
+from repro.serving.metrics import JsonlTracker, Tracker, read_jsonl
+
+from .common import row
+from .sched_sweep import (
+    DP,
+    M_PER_MACHINE,
+    N_MACHINES,
+    bursty_stream,
+    diurnal_stream,
+)
+
+N_REPLICAS = 2
+# first-run jit stall per bucket shape per replica: the warmth signal.
+# Deliberately larger than the 12 ms burst SLA and comparable to one
+# ~30 ms 1024 batch — a cold replica visibly costs the latency tier.
+TRACE_COST_S = 0.04
+
+# scenario -> (stream factory, injected failure/drain or None)
+SCENARIOS = {
+    "bursty": (bursty_stream, None),
+    "bursty+fail": (bursty_stream,
+                    FailureEvent(at=0.35, rid="r0", kind="fail",
+                                 revive_after=0.12)),
+    "diurnal+drain": (diurnal_stream,
+                      FailureEvent(at=0.2, rid="r0", kind="drain",
+                                   revive_after=0.2)),
+}
+
+
+def run_one(scenario: str, policy: str, n_replicas: int = N_REPLICAS,
+            trace_dir: pathlib.Path | None = None) -> dict:
+    """One (scenario, policy) fleet run.  With ``trace_dir`` set, every
+    replica streams its trace to ``<dir>/<scenario>-<policy>-<rid>.jsonl``
+    and the router folds into ``...-router.jsonl`` — the files CI's
+    schema gate validates; otherwise the streams stay in memory
+    (``RecordingTracker``), byte-identical fold semantics."""
+    gen, failure = SCENARIOS[scenario]
+    reqs = [dataclasses.replace(r) for r in gen()]
+    tag = scenario.replace("+", "_")
+    with contextlib.ExitStack() as stack:
+        if trace_dir is not None:
+            trace_dir.mkdir(parents=True, exist_ok=True)
+            paths = [trace_dir / f"{tag}-{policy}-r{k}.jsonl"
+                     for k in range(n_replicas)]
+            router_trk = stack.enter_context(
+                JsonlTracker(trace_dir / f"{tag}-{policy}-router.jsonl"))
+        else:
+            paths = [None] * n_replicas
+            router_trk = None
+        replicas = [Replica.sim(f"r{k}", paths[k]) for k in range(n_replicas)]
+        for rep in replicas:
+            if isinstance(rep.tracker, JsonlTracker):
+                stack.enter_context(rep.tracker)
+        router = FleetRouter(replicas, policy=policy, tracker=router_trk)
+        stats = run_fleet(reqs, router, trace_cost_s=TRACE_COST_S,
+                          failure=failure)
+        stats["_router"] = router  # smoke asserts inspect the folded view
+        stats["_replicas"] = replicas
+    return stats
+
+
+@functools.lru_cache(maxsize=1)
+def _sweep() -> dict:
+    """Every (scenario, policy) cell — deterministic, so memoized (run(),
+    records() and the smoke asserts all consume it)."""
+    return {(sc, pol): run_one(sc, pol)
+            for sc in SCENARIOS for pol in POLICIES}
+
+
+_METRIC_KEYS = ("pad_tokens", "real_tokens", "batches", "max_wait",
+                "sla_miss", "sla_met", "sla_total", "served", "preemptions",
+                "makespan_s", "sla_met_frac", "spills", "repartitions",
+                "requeued", "traces")
+
+
+def _metrics(s: dict) -> dict:
+    return {k: s[k] for k in _METRIC_KEYS}
+
+
+def _cell_row(scenario: str, policy: str, s: dict) -> str:
+    return row(
+        f"fleet_sweep/R{N_REPLICAS}/{scenario}/{policy}",
+        s["makespan_s"] * 1e6,
+        f"sla_met_frac={s['sla_met_frac']:.3f},served={s['served']},"
+        f"batches={s['batches']},traces={s['traces']},"
+        f"spills={s['spills']},requeued={s['requeued']},"
+        f"max_wait_s={s['max_wait']:.2f}")
+
+
+def run() -> list[str]:
+    sweep = _sweep()
+    rows = [_cell_row(sc, pol, sweep[(sc, pol)])
+            for sc in SCENARIOS for pol in POLICIES]
+    rr, warm = sweep[("bursty", "round_robin")], sweep[("bursty", "warmth")]
+    rows.append(row(
+        f"fleet_sweep/R{N_REPLICAS}/bursty/uplift",
+        (warm["sla_met_frac"] - rr["sla_met_frac"]) * 1e6,
+        f"sla_met_frac={rr['sla_met_frac']:.3f}->{warm['sla_met_frac']:.3f},"
+        f"traces={rr['traces']}->{warm['traces']}"))
+    return rows
+
+
+def records() -> list[dict]:
+    """Structured BENCH_fleet_sweep.json records: one per (scenario,
+    policy) cell, same per-replica cluster fields as sched_sweep plus
+    the fleet width."""
+    sweep = _sweep()
+    return [{
+        "name": f"fleet_sweep/R{N_REPLICAS}/{sc}/{pol}",
+        "policy": pol,
+        "scenario": sc,
+        "n_replicas": N_REPLICAS,
+        "n_machines": N_MACHINES,
+        "m_per_machine": M_PER_MACHINE,
+        "dp": DP,
+        "metrics": _metrics(sweep[(sc, pol)]),
+        "measured_step_us": None,
+    } for sc in SCENARIOS for pol in POLICIES]
+
+
+# ---------------------------------------------------------------------------
+# --smoke: acceptance asserts + schema-valid shipped traces
+# ---------------------------------------------------------------------------
+
+def _assert_uplift() -> list[str]:
+    """ISSUE-9 acceptance: warm-cache affinity beats round_robin on
+    SLA-met fraction for the bursty mixed-resolution scenario — and
+    STRICTLY with the replica failure injected — while serving every
+    request on every policy, failover included."""
+    sweep = _sweep()
+    for (sc, pol), s in sweep.items():
+        assert s["served"] == sweep[(sc, "round_robin")]["served"] > 0, (
+            sc, pol, s["served"])
+    rr, warm = sweep[("bursty", "round_robin")], sweep[("bursty", "warmth")]
+    assert warm["sla_met_frac"] >= rr["sla_met_frac"], (
+        warm["sla_met_frac"], rr["sla_met_frac"])
+    assert warm["traces"] < rr["traces"], (warm["traces"], rr["traces"])
+    frr = sweep[("bursty+fail", "round_robin")]
+    fwarm = sweep[("bursty+fail", "warmth")]
+    assert fwarm["sla_met_frac"] > frr["sla_met_frac"], (
+        fwarm["sla_met_frac"], frr["sla_met_frac"])
+    assert fwarm["requeued"] > 0, "failure never evacuated a queue"
+    return [f"uplift: bursty sla_met {rr['sla_met_frac']:.3f} -> "
+            f"{warm['sla_met_frac']:.3f} "
+            f"(traces {rr['traces']} -> {warm['traces']}); +fail "
+            f"{frr['sla_met_frac']:.3f} -> {fwarm['sla_met_frac']:.3f} "
+            f"({fwarm['requeued']} requeued)"]
+
+
+def _assert_fold_sums() -> list[str]:
+    """The router's folded view must SUM per-replica counters (the
+    metrics.replay clobber bug this PR fixes) and keep per-replica tag
+    namespaces: router totals == sum over replicas of each replica's own
+    aggregate, per counter."""
+    sweep = _sweep()
+    s = sweep[("bursty+fail", "warmth")]
+    router, replicas = s["_router"], s["_replicas"]
+    for name in ("sched.submitted", "sched.admissions",
+                 "plan_cache.step_miss", "replica.served"):
+        per_replica = sum(rep.tracker.counter_total(name)
+                          for rep in replicas)
+        folded = router.tracker.counter_total(name)
+        assert folded == per_replica, (name, folded, per_replica)
+        for rep in replicas:
+            mine = sum(v for tags, v in
+                       router.tracker.counter_items(name)
+                       if tags.get("replica") == rep.rid)
+            assert mine == rep.tracker.counter_total(name), (
+                name, rep.rid, mine)
+    return [f"fold: router counter totals == per-replica sums "
+            f"(submitted={int(router.tracker.counter_total('sched.submitted'))}"
+            f" across {len(replicas)} replicas)"]
+
+
+def _assert_shipped_traces(trace_dir: pathlib.Path) -> list[str]:
+    """Re-run one cell with JSONL sinks: every per-replica trace and the
+    router's folded trace must be schema-valid (read back with
+    ``validate=True``), and the folded totals must match a direct fold
+    of the files."""
+    from repro.serving.metrics import replay
+
+    run_one("bursty+fail", "warmth", trace_dir=trace_dir)
+    files = sorted(trace_dir.glob("bursty_fail-warmth-*.jsonl"))
+    assert len(files) == N_REPLICAS + 1, files
+    total = 0
+    submitted = 0.0
+    for f in files:
+        recs = read_jsonl(f, validate=True)
+        assert recs, f
+        total += len(recs)
+        if "router" not in f.name:
+            submitted += replay(recs).counter_total("sched.submitted")
+    folded = replay(read_jsonl(
+        trace_dir / "bursty_fail-warmth-router.jsonl", validate=True))
+    assert folded.counter_total("sched.submitted") == submitted, (
+        folded.counter_total("sched.submitted"), submitted)
+    return [f"traces: {len(files)} schema-valid JSONL streams "
+            f"({total} records), replayed folded submitted == "
+            f"per-replica sum ({int(submitted)})"]
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the acceptance claims")
+    ap.add_argument("--trace-dir", type=pathlib.Path, default=None,
+                    help="retain per-replica + router-folded JSONL traces "
+                         "here (for scripts/check_metrics_schema.py)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+
+    for line in run():
+        print(line)
+    if args.smoke or args.trace_dir is not None:
+        with contextlib.ExitStack() as stack:
+            td = args.trace_dir
+            if td is None:
+                td = pathlib.Path(stack.enter_context(
+                    tempfile.TemporaryDirectory()))
+            msgs = []
+            if args.smoke:
+                msgs += _assert_uplift()
+                msgs += _assert_fold_sums()
+            msgs += _assert_shipped_traces(td)
+            for m in msgs:
+                print(f"# {m}", file=sys.stderr)
+        if args.smoke:
+            print("# fleet_sweep smoke OK", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -105,6 +105,7 @@ def main(argv: list[str] | None = None) -> None:
         comm_volume,
         config_sweep,
         e2e_latency,
+        fleet_sweep,
         hybrid_sweep,
         kernel_bench,
         layerwise,
@@ -122,6 +123,7 @@ def main(argv: list[str] | None = None) -> None:
         "roofline_table (assignment)": roofline_table,
         "hybrid_sweep (beyond-paper, DESIGN.md §7)": hybrid_sweep,
         "sched_sweep (beyond-paper, DESIGN.md §9)": sched_sweep,
+        "fleet_sweep (beyond-paper, DESIGN.md §13)": fleet_sweep,
     }
     if args.only is not None:
         modules = {t: m for t, m in modules.items() if args.only in t}

@@ -300,6 +300,20 @@ class Tracker:
         """Sum of a counter over ALL tag sets sharing ``name``."""
         return sum(v for (n, _), v in self._counters.items() if n == name)
 
+    def counter_items(self, name: str) -> list[tuple[dict, float]]:
+        """Every tag set of a counter with its total — how a fleet router
+        enumerates a folded multi-replica view (e.g. which ``replica``
+        tags have compiled which ``seq`` shapes) without knowing the tag
+        sets in advance."""
+        return [(dict(k), v) for (n, k), v in self._counters.items()
+                if n == name]
+
+    def series_items(self, name: str) -> list[tuple[dict, "SeriesStats"]]:
+        """Every tag set of a gauge/span series with its aggregate stats
+        (the gauge counterpart of ``counter_items``)."""
+        return [(dict(k), st) for (n, k), st in self._stats.items()
+                if n == name]
+
     def series(self, name: str,
                tags: Mapping[str, TagValue] | None = None) -> SeriesStats:
         """Aggregate stats of one gauge series (empty stats if unseen)."""
@@ -445,17 +459,70 @@ def read_jsonl(path: str | pathlib.Path, validate: bool = True,
     return records
 
 
-def replay(records: Iterable[Record], into: Tracker | None = None) -> Tracker:
-    """Re-publish a record stream into a fresh aggregating tracker —
-    counters land on their recorded cumulative totals (counter records
-    carry totals, so the last one per series wins), gauges rebuild their
-    series stats.  How a fleet router would fold a replica's shipped
-    trace into its own view."""
+class TraceFold:
+    """Incremental fold of one shipped record stream into another tracker
+    — the consumer side of the fleet tier's trace-shipping protocol
+    (DESIGN.md §13; ``serving/fleet.py``).
+
+    Counter records carry cumulative totals, so writing them into the
+    destination verbatim would (a) bypass ``_emit`` — persistent sinks
+    like ``JsonlTracker`` would silently drop every replayed counter —
+    and (b) make a second stream folded into the same tracker CLOBBER
+    the first (last record wins) instead of summing.  The fold instead
+    differences consecutive totals per SOURCE series and re-publishes the
+    increments through the tracker API (``count``/``log``/``span_event``),
+    so:
+
+      * every replayed record reaches ``_emit`` (persistent sinks see it),
+      * multiple replicas' streams folded into one tracker SUM,
+      * re-folding a growing trace from the start is idempotent on the
+        already-folded prefix (records are deduplicated by ``seq``).
+
+    ``tags`` namespaces every re-published record (the router passes
+    ``{"replica": rid}``), so per-replica series stay distinguishable in
+    the folded view while ``counter_total`` still sums across them."""
+
+    def __init__(self, tags: Mapping[str, TagValue] | None = None):
+        self.tags: dict[str, TagValue] = dict(tags) if tags else {}
+        self._totals: dict[tuple[str, tuple], float] = {}
+        self._cursor = -1  # highest source seq already folded
+
+    def fold(self, records: Iterable[Record], into: Tracker) -> int:
+        """Re-publish every not-yet-folded record into ``into``; returns
+        the number of records folded."""
+        n = 0
+        for r in records:
+            if r.seq <= self._cursor:
+                continue  # already folded in an earlier ship
+            self._cursor = r.seq
+            tags = {**r.tags, **self.tags} or None
+            if r.kind == "counter":
+                key = (r.name, _tag_key(r.tags))
+                prev = self._totals.get(key, 0.0)
+                assert r.value >= prev, (
+                    f"counter {r.name} decreased in source stream "
+                    f"({prev} -> {r.value}); not a valid metrics.v1 trace")
+                self._totals[key] = r.value
+                into.count(r.name, r.value - prev, step=r.step, tags=tags)
+            elif r.kind == "span":
+                into.span_event(r.name, r.t_start, r.value, step=r.step,
+                                tags=tags)
+            else:
+                into.log(r.name, r.value, step=r.step, tags=tags)
+            n += 1
+        return n
+
+
+def replay(records: Iterable[Record], into: Tracker | None = None,
+           tags: Mapping[str, TagValue] | None = None) -> Tracker:
+    """Re-publish a record stream into a tracker — counters land on their
+    recorded cumulative totals via per-series increments routed through
+    the tracker API (so persistent sinks receive the replayed records and
+    folding a SECOND stream into the same tracker sums instead of
+    clobbering), gauges rebuild their series stats, spans keep their
+    windows.  ``tags`` namespaces the folded records (a fleet router
+    passes ``{"replica": rid}`` per shipped trace); use ``TraceFold``
+    directly for incremental shipping of a growing trace."""
     t = into if into is not None else Tracker()
-    for r in records:
-        if r.kind == "counter":
-            key = (r.name, _tag_key(r.tags))
-            t._counters[key] = r.value
-        else:
-            t.log(r.name, r.value, step=r.step, tags=r.tags)
+    TraceFold(tags=tags).fold(records, t)
     return t

@@ -135,18 +135,44 @@ class Bucketer:
         b.q.append(req)
 
     def requeue(self, reqs: list, pad_rows: int = 0) -> None:
-        """Re-enqueue a preempted batch at the front of its bucket(s),
+        """Re-enqueue a preempted batch at the front of its bucket,
         oldest first, with accrued ages intact and its admission
-        accounting reversed (batches never mix buckets, so the padding
-        belongs to the single bucket involved)."""
+        accounting reversed.
+
+        Batches NEVER mix buckets (SP needs one latent length per batch),
+        so a preempted batch's requests all share one seq_len — that
+        invariant is asserted here rather than papered over: the old code
+        silently zeroed ``pad_rows`` for a multi-bucket list, which would
+        mis-account padding with no signal if the invariant ever broke."""
+        if not reqs:
+            assert pad_rows == 0, (
+                f"requeue of an empty batch cannot carry {pad_rows} pad rows")
+            return
         by_seq: dict[int, list] = {}
         for r in reqs:
             by_seq.setdefault(r.seq_len, []).append(r)
-        for seq, rs in by_seq.items():
-            b = self.buckets.get(seq)
-            if b is None:
-                b = self.buckets[seq] = Bucket(seq)
-            b.push_front(rs, pad_rows if len(by_seq) == 1 else 0)
+        assert len(by_seq) == 1, (
+            f"requeued batch mixes buckets {sorted(by_seq)}: batches never "
+            f"mix buckets, so a preempted batch must be single-bucket")
+        ((seq, rs),) = by_seq.items()
+        b = self.buckets.get(seq)
+        if b is None:
+            b = self.buckets[seq] = Bucket(seq)
+        b.push_front(rs, pad_rows)
+
+    def drain(self) -> list:
+        """Evacuate every queued (not-yet-admitted) request — what a
+        failed fleet replica hands back to the router for re-dispatch
+        (serving/fleet.py).  Global FIFO by submission time, ``submitted``
+        untouched (accrued age survives the failover, same invariant as
+        ``requeue``).  Admission accounting is NOT reversed: queued
+        requests were never admitted, so there is nothing to reverse."""
+        out: list = []
+        for b in self.buckets.values():
+            out.extend(b.q)
+            b.q.clear()
+        out.sort(key=lambda r: r.submitted)
+        return out
 
     @property
     def pending(self) -> int:

@@ -54,9 +54,18 @@ class ArrivalForecaster:
     """
 
     def __init__(self, alpha: float = 0.25,
-                 tracker: Tracker | None = None):
+                 tracker: Tracker | None = None,
+                 idle_age: float | None = None):
         assert 0.0 < alpha <= 1.0, alpha
+        assert idle_age is None or idle_age > 0.0, idle_age
         self.alpha = alpha
+        # None = keep every bucket forever (the PR-5 behavior, fine for
+        # bounded benchmark runs); a long-running server sets an idle age
+        # so the per-latent-length map cannot grow without bound — one
+        # ``BucketRate`` per distinct seq_len is a leak under adversarial
+        # or long-tailed resolution mixes (ISSUE 9).  Eviction uses the
+        # caller-supplied ``now`` only — no wall-clock reads here.
+        self.idle_age = idle_age
         self.buckets: dict[int, BucketRate] = {}
         # metrics sink (DESIGN.md §11): the per-bucket rate estimate is
         # published on every update so a trace shows the forecast the
@@ -65,6 +74,7 @@ class ArrivalForecaster:
 
     def observe(self, seq_len: int, now: float) -> None:
         """Record one arrival (called on every submit)."""
+        self.evict_idle(now)
         b = self.buckets.get(seq_len)
         if b is None:
             self.buckets[seq_len] = BucketRate(last_arrival=now)
@@ -81,6 +91,23 @@ class ArrivalForecaster:
         b.n += 1
         self.tracker.log("forecast.mean_gap_s", b.mean_gap,
                          tags={"seq": seq_len})
+
+    def evict_idle(self, now: float) -> int:
+        """Drop every bucket whose last arrival is more than ``idle_age``
+        old; returns how many were evicted.  Called from every
+        ``observe``, and directly by long-idle owners (the fleet tier's
+        per-replica forecasters).  A dried-up bucket re-seeds from
+        scratch on its next arrival — correct, since its old rate
+        estimate carried no predictive value anyway (see
+        ``expected_fill_time``'s dried-up-bucket note)."""
+        if self.idle_age is None:
+            return 0
+        dead = [s for s, b in self.buckets.items()
+                if now - b.last_arrival > self.idle_age]
+        for s in dead:
+            del self.buckets[s]
+            self.tracker.count("forecast.evictions", tags={"seq": s})
+        return len(dead)
 
     def rate(self, seq_len: int) -> float:
         b = self.buckets.get(seq_len)

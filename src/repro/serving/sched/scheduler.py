@@ -56,15 +56,24 @@ class RequestScheduler:
         """Requests returned via ``requeue()``."""
         return int(self.tracker.counter("sched.requeued_requests"))
 
-    def submit(self, req, now: float) -> None:
+    def submit(self, req, now: float, *, resubmit: bool = False) -> None:
         """Enqueue a request, stamping its submission time (the basis for
         SLA deadlines and starvation ages) and feeding the bucket's
-        arrival-rate estimate."""
-        req.submitted = now
-        if self.forecaster is not None:
-            self.forecaster.observe(req.seq_len, now)
+        arrival-rate estimate.
+
+        ``resubmit=True`` is the fleet-failover path (serving/fleet.py):
+        the request was evacuated from another replica, so ``submitted``
+        is kept (accrued age and the original SLA deadline survive the
+        re-dispatch, same invariant as ``requeue``) and the arrival is
+        NOT fed to the forecaster — a failover is not new traffic."""
+        if resubmit:
+            self.tracker.count("sched.resubmitted", tags={"seq": req.seq_len})
+        else:
+            req.submitted = now
+            if self.forecaster is not None:
+                self.forecaster.observe(req.seq_len, now)
+            self.tracker.count("sched.submitted", tags={"seq": req.seq_len})
         self.bucketer.add(req)
-        self.tracker.count("sched.submitted", tags={"seq": req.seq_len})
 
     def requeue(self, reqs: list, pad_rows: int = 0) -> None:
         """Park a preempted batch: its requests return to the HEAD of
@@ -77,6 +86,15 @@ class RequestScheduler:
         ``next_batch`` decisions, parked or not."""
         self.bucketer.requeue(reqs, pad_rows)
         self.tracker.count("sched.requeued_requests", len(reqs))
+
+    def drain(self) -> list:
+        """Evacuate every queued request (global FIFO by submission,
+        ``submitted`` untouched) — a failed/draining fleet replica hands
+        these back to the router for re-dispatch (serving/fleet.py)."""
+        reqs = self.bucketer.drain()
+        if reqs:
+            self.tracker.count("sched.drained", len(reqs))
+        return reqs
 
     @property
     def pending(self) -> int:

@@ -1,0 +1,310 @@
+"""Fleet tier (serving/fleet.py, DESIGN.md §13) and the cross-replica
+metrics-replay fixes (ISSUE 9):
+
+  (a) folding two replicas' traces into one router tracker SUMS counters
+      (the old ``replay`` wrote ``_counters[key] = value`` directly —
+      last trace won) and routes through the tracker API, so persistent
+      router sinks re-emit every folded record,
+  (b) gauge series keep their per-replica tag namespace across the fold,
+  (c) a truncated-tail trace (replica killed mid-write) still folds via
+      ``read_jsonl(partial_tail="drop")``,
+  (d) router policies decide ONLY from the folded view + the unshipped
+      dispatch ledger — never by reaching into a replica's scheduler,
+  (e) failover re-dispatch preserves accrued submission age.
+
+All host-side on simulated time; the replica stacks use the small plan
+cache flavour from tests/test_sched.py."""
+import dataclasses
+
+import pytest
+
+from repro.serving.fleet import (
+    ACTIVE,
+    DRAINING,
+    FAILED,
+    FailureEvent,
+    FleetConfig,
+    FleetRequest,
+    FleetRouter,
+    Replica,
+    run_fleet,
+)
+from repro.serving.metrics import (
+    JsonlTracker,
+    RecordingTracker,
+    TraceFold,
+    Tracker,
+    read_jsonl,
+    replay,
+)
+
+
+def sim_replica(rid: str, trace_path=None, **kw) -> Replica:
+    args = dict(n_machines=2, m_per_machine=4, heads=8, head_dim=64,
+                n_layers=8, num_steps=4, dp=2, max_batch=4)
+    args.update(kw)
+    return Replica.sim(rid, trace_path, **args)
+
+
+def req(rid: int, seq: int, arrival: float = 0.0,
+        sla: float | None = None) -> FleetRequest:
+    return FleetRequest(rid=rid, seq_len=seq, arrival=arrival, sla=sla)
+
+
+# ---------------------------------------------------------------------------
+# (a) two-replica fold: sums, not clobbers; persistent sinks see records
+# ---------------------------------------------------------------------------
+
+def _replica_trace(counts: list[float], gauge: float) -> list:
+    """A recorded stream with one counter series and one gauge series —
+    the same (name, tags) on every replica, the clobber scenario."""
+    t = RecordingTracker()
+    for v in counts:
+        t.count("sched.submitted", v, tags={"seq": 256})
+    t.log("replica.queue_depth", gauge)
+    return t.records
+
+
+def test_two_replica_fold_sums_counters():
+    router = Tracker()
+    TraceFold(tags={"replica": "r0"}).fold(_replica_trace([1, 1], 3.0),
+                                           router)
+    TraceFold(tags={"replica": "r1"}).fold(_replica_trace([1, 1, 1], 5.0),
+                                           router)
+    # the old replay assigned the second trace's cumulative total over
+    # the first: counter_total would read 3, not 5
+    assert router.counter_total("sched.submitted") == 5
+    assert router.counter("sched.submitted",
+                          {"seq": 256, "replica": "r0"}) == 2
+    assert router.counter("sched.submitted",
+                          {"seq": 256, "replica": "r1"}) == 3
+
+
+def test_fold_routes_through_emit_for_persistent_sinks(tmp_path):
+    """The old replay bypassed ``_emit`` — a JsonlTracker fold target
+    would write NOTHING for replayed counters."""
+    sink = JsonlTracker(tmp_path / "router.jsonl")
+    TraceFold(tags={"replica": "r0"}).fold(_replica_trace([1, 2], 3.0), sink)
+    sink.close()
+    recs = read_jsonl(tmp_path / "router.jsonl")
+    counters = [r for r in recs if r.kind == "counter"]
+    assert len(counters) == 2
+    # re-emitted as increments under the router's own dense seq: the
+    # folded file is itself a valid, replayable metrics.v1 stream
+    assert [r.seq for r in recs] == list(range(len(recs)))
+    assert replay(recs).counter_total("sched.submitted") == 3
+
+
+def test_fold_keeps_per_replica_gauge_namespace():
+    router = Tracker()
+    TraceFold(tags={"replica": "r0"}).fold(_replica_trace([1], 3.0), router)
+    TraceFold(tags={"replica": "r1"}).fold(_replica_trace([1], 5.0), router)
+    assert router.series("replica.queue_depth", {"replica": "r0"}).last == 3.0
+    assert router.series("replica.queue_depth", {"replica": "r1"}).last == 5.0
+    # and the namespaces are separate series, not one merged gauge
+    assert router.series("replica.queue_depth").n == 0
+
+
+def test_fold_is_incremental_not_double_counting():
+    src = RecordingTracker()
+    router = Tracker()
+    fold = TraceFold(tags={"replica": "r0"})
+    src.count("c", 2)
+    assert fold.fold(src.records, router) == 1
+    src.count("c", 3)
+    # second ship re-reads the whole stream; only the new record folds
+    assert fold.fold(src.records, router) == 1
+    assert router.counter_total("c") == 5
+
+
+def test_fold_rejects_counter_regression():
+    """A cumulative counter running backwards means trace corruption —
+    fold refuses rather than publishing a negative increment."""
+    good = Tracker()
+    recs = _replica_trace([1, 1], 0.0)
+    corrupted = [recs[1], dataclasses.replace(recs[0], seq=5)]
+    with pytest.raises(AssertionError):
+        TraceFold().fold(corrupted, good)
+
+
+def test_truncated_tail_trace_still_folds(tmp_path):
+    p = tmp_path / "r0.jsonl"
+    with JsonlTracker(p) as t:
+        t.count("sched.submitted", 1, tags={"seq": 256})
+        t.count("sched.submitted", 1, tags={"seq": 256})
+        t.log("replica.queue_depth", 7.0)
+    # replica killed mid-write: the final line is half a record
+    raw = p.read_text()
+    p.write_text(raw[:len(raw) - len(raw.splitlines()[-1]) // 2 - 1])
+    recs = read_jsonl(p, partial_tail="drop")
+    assert len(recs) == 2
+    router = Tracker()
+    TraceFold(tags={"replica": "r0"}).fold(recs, router)
+    assert router.counter_total("sched.submitted") == 2
+
+
+def test_replay_into_persistent_sink_reemits():
+    """replay() is a fold into a fresh (or caller-supplied) tracker —
+    a RecordingTracker target must capture every replayed record."""
+    back = replay(_replica_trace([1, 1], 3.0), into=RecordingTracker())
+    assert isinstance(back, RecordingTracker)
+    assert len(back.records) == 3
+    assert back.counter_total("sched.submitted") == 2
+
+
+# ---------------------------------------------------------------------------
+# (d) router decides from the folded view only
+# ---------------------------------------------------------------------------
+
+def make_fleet(policy: str, n: int = 2, **cfg_kw):
+    reps = [sim_replica(f"r{k}") for k in range(n)]
+    return reps, FleetRouter(reps, policy=policy,
+                             cfg=FleetConfig(**cfg_kw))
+
+
+def test_round_robin_cycles_active_replicas():
+    reps, router = make_fleet("round_robin", n=3)
+    picks = [router.dispatch(req(i, 256, 0.0), 0.0) for i in range(6)]
+    assert picks == ["r0", "r1", "r2", "r0", "r1", "r2"]
+    reps[1].drain(0.0)
+    router.ship(0.0)  # the router learns state ONLY from the fold
+    picks = [router.dispatch(req(i, 256, 0.0), 0.0) for i in range(4)]
+    assert "r1" not in picks
+
+
+def test_least_loaded_uses_ledger_before_ship_and_fold_after():
+    reps, router = make_fleet("least_loaded")
+    # before any ship the folded depth is 0 for both; the unshipped
+    # dispatch ledger alone must balance the load
+    picks = [router.dispatch(req(i, 256, 0.0), 0.0) for i in range(4)]
+    assert sorted(picks) == ["r0", "r0", "r1", "r1"]
+    router.ship(0.0)
+    # folded queue_depth now carries what the ledger carried
+    v0, v1 = router.view("r0"), router.view("r1")
+    assert (v0.queue_depth, v0.in_flight) == (2, 0)
+    assert (v1.queue_depth, v1.in_flight) == (2, 0)
+    assert v0.queue_depth == reps[0].pending  # fold mirrors the truth
+
+
+def test_warmth_affinity_is_sticky_per_band():
+    _, router = make_fleet("warmth")
+    homes = {router.dispatch(req(i, 256, 0.0), 0.0) for i in range(5)}
+    assert len(homes) == 1  # one home replica for the band
+    other = {router.dispatch(req(10 + i, 1024, 0.0), 0.0) for i in range(5)}
+    assert len(other) == 1
+    assert homes != other  # second band homes on the other replica
+
+
+def test_warmth_spills_under_pressure():
+    _, router = make_fleet("warmth", spill_depth=3)
+    for i in range(3):
+        router.dispatch(req(i, 256, 0.0), 0.0)
+    assert router.spills == 0
+    spilled = router.dispatch(req(3, 256, 0.0), 0.0)
+    assert router.spills == 1
+    assert spilled != router._pools[256][0]
+
+
+def test_warmth_first_sighting_prefers_warm_replica():
+    reps, router = make_fleet("warmth")
+    # r1's folded trace shows a compiled step for seq=512 (a step_miss
+    # counter with that tag); the band's first dispatch must go there
+    reps[1].tracker.count("plan_cache.step_miss", tags={"rows": 4,
+                                                        "seq": 512})
+    router.ship(0.0)
+    assert router.view("r1").warm == frozenset({512})
+    assert router.dispatch(req(0, 512, 0.0), 0.0) == "r1"
+
+
+def test_failover_redispatch_preserves_age():
+    reps, router = make_fleet("round_robin")
+    r = req(0, 256, arrival=0.0, sla=1.0)
+    router.dispatch(r, 0.0)
+    assert r.submitted == 0.0
+    rid = "r0" if reps[0].pending else "r1"
+    evacuated = router.by_rid[rid].fail(0.5)
+    assert [x.rid for x in evacuated] == [0]
+    assert router.by_rid[rid].state == FAILED
+    router.ship(0.5)
+    new_rid = router.redispatch(evacuated, 0.5)[0]
+    assert new_rid != rid
+    # accrued age survives the failover: submitted is NOT restamped
+    assert r.submitted == 0.0
+    assert router.requeued == 1
+    srv = router.by_rid[new_rid].scheduler
+    assert srv.tracker.counter_total("sched.resubmitted") == 1
+    assert srv.tracker.counter_total("sched.submitted") == 0
+
+
+def test_dispatch_to_failed_replica_refused():
+    reps, router = make_fleet("round_robin")
+    for rep in reps:
+        rep.fail(0.0)
+    router.ship(0.0)
+    with pytest.raises(RuntimeError):
+        router.dispatch(req(0, 256, 0.0), 0.0)
+    reps[0].resume(0.1)
+    router.ship(0.1)
+    assert router.dispatch(req(0, 256, 0.1), 0.1) == "r0"
+
+
+def test_replica_state_machine_roundtrip():
+    rep = sim_replica("r0")
+    assert rep.state == ACTIVE
+    rep.drain(0.0)
+    assert rep.state == DRAINING
+    rep.resume(0.1)
+    rep.submit(req(0, 256), 0.1)
+    assert rep.fail(0.2)[0].rid == 0
+    assert rep.state == FAILED and rep.pending == 0
+    # the transitions were all published as gauge samples
+    codes = [r.value for r in rep.tracker.records
+             if r.name == "replica.state"]
+    assert codes == [0.0, 1.0, 0.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fleet run (small, deterministic)
+# ---------------------------------------------------------------------------
+
+def _stream(n: int = 24) -> list[FleetRequest]:
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += 0.003 + 0.002 * (i % 3)
+        seq = (256, 512, 1024)[(i * 7) % 3]
+        reqs.append(FleetRequest(rid=i, seq_len=seq, arrival=round(t, 5),
+                                 sla=2.0))
+    return reqs
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "warmth", "sla"])
+def test_run_fleet_serves_everything(policy):
+    reps = [sim_replica(f"r{k}") for k in range(2)]
+    router = FleetRouter(reps, policy=policy)
+    stats = run_fleet(_stream(), router)
+    assert stats["served"] == 24
+    assert stats["sla_total"] == 24
+    assert stats["preemptions"] == 0
+    # fleet totals mirror the folded per-replica counters exactly
+    folded = router.tracker.counter_total("replica.served")
+    assert folded == 24
+
+
+def test_run_fleet_failover_serves_everything():
+    reps = [sim_replica(f"r{k}") for k in range(2)]
+    router = FleetRouter(reps, policy="warmth")
+    stats = run_fleet(
+        _stream(), router,
+        failure=FailureEvent(at=0.03, rid="r0", kind="fail",
+                             revive_after=0.05))
+    assert stats["served"] == 24
+    # the folded router stream shows the failure transition it acted on
+    st = router.tracker.series("replica.state", {"replica": "r0"})
+    assert st.vmax == 2.0  # FAILED was visible through the fold
+
+
+def test_run_fleet_is_deterministic():
+    def once():
+        reps = [sim_replica(f"r{k}") for k in range(2)]
+        return run_fleet(_stream(), FleetRouter(reps, policy="sla"))
+    assert once() == once()

@@ -91,6 +91,47 @@ def test_fifo_within_bucket():
     assert [r.rid for r in adm.requests] == [0, 1, 2, 3]
 
 
+def test_requeue_reverses_admission_accounting():
+    """A parked batch's bucket accounting (batches/admitted/pad work) is
+    fully reversed on requeue and counted exactly once after eventual
+    re-admission — including the dp pad rows the old code silently
+    zeroed (ISSUE 9)."""
+    s = make_sched()
+    s.submit(Req(0, 256), now=0.0)
+    adm = s.next_batch(0.0, flush=True)  # lone request: k=1 + 1 pad row
+    assert adm.pad_rows == 1
+    s.requeue(adm.requests, adm.pad_rows)
+    tot = s.totals()
+    assert (tot.batches, tot.admitted, tot.padded_rows) == (0, 0, 0)
+    assert tot.padded_token_work == tot.real_token_work == 0
+    again = s.next_batch(0.0, flush=True)
+    assert [r.rid for r in again.requests] == [r.rid for r in adm.requests]
+    tot = s.totals()
+    assert (tot.batches, tot.admitted, tot.padded_rows) == (1, 1, 1)
+    assert tot.padded_token_work == tot.real_token_work == 256
+
+
+def test_requeue_rejects_mixed_bucket_batch():
+    """Batches never mix buckets, so a multi-seq_len requeue means the
+    caller broke the invariant — asserted, not silently mis-accounted."""
+    s = make_sched()
+    with pytest.raises(AssertionError, match="mixes buckets"):
+        s.requeue([Req(0, 256), Req(1, 512)], pad_rows=1)
+    with pytest.raises(AssertionError):
+        s.requeue([], pad_rows=1)  # pad rows without a batch
+    s.requeue([], pad_rows=0)  # empty no-op stays legal
+
+
+def test_bucketer_drain_returns_global_fifo_with_age_intact():
+    s = make_sched()
+    for i, (n, at) in enumerate([(256, 0.3), (512, 0.1), (256, 0.2)]):
+        s.submit(Req(i, n), now=at)
+    out = s.drain()
+    assert [r.rid for r in out] == [1, 2, 0]  # by submission time
+    assert [r.submitted for r in out] == [0.1, 0.2, 0.3]  # untouched
+    assert s.pending == 0 and s.drain() == []
+
+
 # ---------------------------------------------------------------------------
 # admission: SLA urgency, starvation bound, padded-batch deferral
 # ---------------------------------------------------------------------------

@@ -124,6 +124,52 @@ def test_fast_bucket_still_defers_for_packing():
     assert adm is not None
 
 
+def test_forecaster_evicts_idle_buckets():
+    """With ``idle_age`` set, a bucket whose arrivals dried up is dropped
+    on the next observe — the per-seq_len map stays bounded by the set of
+    RECENTLY seen resolutions, not every resolution ever seen (ISSUE 9:
+    ``buckets`` grew without bound)."""
+    f = ArrivalForecaster(idle_age=1.0)
+    f.observe(1024, 0.0)
+    f.observe(256, 0.5)
+    for i in range(6):
+        f.observe(256, 0.6 + 0.1 * i)
+    assert 1024 not in f.buckets  # idle > 1 s: evicted by a 256 observe
+    assert set(f.buckets) == {256}
+    # a returning bucket re-seeds from scratch (needs two arrivals again)
+    f.observe(1024, 1.2)
+    assert f.rate(1024) == 0.0
+
+
+def test_forecaster_eviction_bounds_memory_under_resolution_churn():
+    f = ArrivalForecaster(idle_age=0.5)
+    for i in range(500):  # adversarial: every request a new resolution
+        f.observe(256 + i, 0.1 * i)
+    assert len(f.buckets) <= 6  # only buckets inside the idle window
+    # the PR-5 default (no idle_age) keeps the old retain-forever shape
+    g = ArrivalForecaster()
+    for i in range(100):
+        g.observe(256 + i, 0.1 * i)
+    assert len(g.buckets) == 100
+
+
+def test_forecaster_evict_idle_direct_call_counts_evictions():
+    """Long-idle owners (the fleet tier) call ``evict_idle`` directly;
+    eviction uses caller time only and is published as a counter."""
+    from repro.serving.sched import RecordingTracker
+
+    trk = RecordingTracker()
+    f = ArrivalForecaster(idle_age=2.0, tracker=trk)
+    f.observe(256, 0.0)
+    f.observe(512, 1.0)
+    assert f.evict_idle(1.5) == 0  # nothing idle yet
+    assert f.evict_idle(2.5) == 1  # 256 idle 2.5 s > 2 s
+    assert set(f.buckets) == {512}
+    assert trk.counter("forecast.evictions", {"seq": 256}) == 1
+    with pytest.raises(AssertionError):
+        ArrivalForecaster(idle_age=0.0)
+
+
 # ---------------------------------------------------------------------------
 # (a) preemption preserves accrued age and FIFO position
 # ---------------------------------------------------------------------------
