@@ -1,0 +1,149 @@
+"""Hierarchical-vs-flat a2a sweep (DESIGN.md §8.2): predicted per-step
+serving latency of the flat staged Ulysses all-to-all against the
+two-level (intra-machine exchange + staged inter-machine hops)
+decomposition, and against the two-level path with fp8 wire compression
+on the inter-machine leg, at 2–4 machines.
+
+Both paths move the SAME inter-machine volume — the hierarchical win is
+the message-count term (N - 1 paced inter hops instead of P_u - 1, each
+paying ``NetworkModel.inter_hop_lat``) plus, with ``a2a_wire_dtype``,
+halved wire bytes at the price of a codec term.  The sweep therefore
+separates regimes honestly: hierarchy pays ~N× more NVLink traffic on
+the fast leg, so single-machine or P_u = N topologies (where it cannot
+engage) and bandwidth-dominated regimes show parity, while deep-Ulysses
+multi-machine topologies show the win.
+
+Rows: ``hier_a2a_sweep/<wl>/N<n>/<variant>`` with us = predicted step
+latency and derived = the per-leg split plus speedup over flat.  The
+final row per bucket, ``.../planner``, reports which variant
+``plan_for_shape`` actually selects for that (workload, N) — the
+regression surface for "the planner picks hierarchical where it should".
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.core.comm_model import (
+    LayerWorkload,
+    NetworkModel,
+    hierarchical_applicable,
+    load_network_model,
+    plan_step_latency,
+)
+from repro.core.planner import plan_for_shape, plan_hybrid
+
+from .common import row
+
+# Same paper geometries as hybrid_sweep, trimmed to the buckets where the
+# Ulysses degree is deep enough for hierarchy to be non-trivial.
+WORKLOADS = {
+    "flux_2048": (LayerWorkload(batch=1, seq=16_384, heads=24, head_dim=128), 96),
+    "flux_3072": (LayerWorkload(batch=1, seq=36_864, heads=24, head_dim=128), 96),
+    "cogvideox_20s": (LayerWorkload(batch=1, seq=49_152, heads=24, head_dim=64), 42),
+}
+M_PER_MACHINE = 8
+MACHINES = (2, 3, 4)
+WIRE = "float8_e4m3fn"
+
+
+def _variants(n: int, wl: LayerWorkload, n_layers: int):
+    flat = plan_hybrid(n, M_PER_MACHINE, wl.heads, n_layers=n_layers)
+    out = [("flat", flat)]
+    if hierarchical_applicable(flat.sp):
+        out.append(("hier", dataclasses.replace(flat, hier_a2a=True)))
+        out.append(("hier_fp8", dataclasses.replace(
+            flat, hier_a2a=True, a2a_wire_dtype=WIRE)))
+    return out
+
+
+def _sweep(net: NetworkModel | None = None):
+    net = net or NetworkModel()
+    for wname, (wl, n_layers) in WORKLOADS.items():
+        for n in MACHINES:
+            preds = []
+            for vname, h in _variants(n, wl, n_layers):
+                pred = plan_step_latency(h, wl, net, n_layers=n_layers,
+                                         guided=True)
+                preds.append((vname, h, pred))
+            best, best_pred = plan_for_shape(
+                n, M_PER_MACHINE, wl.heads, seq=wl.seq, batch=wl.batch,
+                head_dim=wl.head_dim, n_layers=n_layers, net=net,
+                a2a_wire_dtype=WIRE)
+            yield wname, n, wl, n_layers, preds, (best, best_pred)
+
+
+def run(net: NetworkModel | None = None) -> list[str]:
+    rows = []
+    for wname, n, wl, n_layers, preds, (best, best_pred) in _sweep(net):
+        base = preds[0][2]["t_step"]  # flat
+        for vname, h, pred in preds:
+            rows.append(row(
+                f"hier_a2a_sweep/{wname}/N{n}/{vname}",
+                pred["t_step"] * 1e6,
+                f"Pu={h.sp.p_ulysses},Pr={h.sp.p_ring},"
+                f"speedup={base / pred['t_step']:.3f}x"))
+        chosen = ("hier_fp8" if best.a2a_wire_dtype else
+                  "hier" if best.hier_a2a else "flat")
+        rows.append(row(
+            f"hier_a2a_sweep/{wname}/N{n}/planner",
+            best_pred["t_step"] * 1e6,
+            f"picks={chosen},cfg={best.cfg},pp={best.pp},"
+            f"Pu={best.sp.p_ulysses},Pr={best.sp.p_ring}"))
+    return rows
+
+
+def records(net: NetworkModel | None = None) -> list[dict]:
+    """BENCH_hier_a2a_sweep.json: one record per (bucket, variant) with
+    the per-leg latency breakdown (t_a2a_inter / t_a2a_intra /
+    t_ring_inter / t_ring_intra / t_codec — no single-blob a2a term) plus
+    one ``planner`` record per bucket naming the selected variant."""
+    out = []
+    for wname, n, wl, n_layers, preds, (best, best_pred) in _sweep(net):
+        for vname, h, pred in preds:
+            out.append({
+                "name": f"hier_a2a_sweep/{wname}/N{n}/{vname}",
+                "workload": {"batch": wl.batch, "seq": wl.seq,
+                             "heads": wl.heads, "head_dim": wl.head_dim,
+                             "n_layers": n_layers},
+                "n_machines": n,
+                "m_per_machine": M_PER_MACHINE,
+                "plan": {"cfg": h.cfg, "pp": h.pp,
+                         "p_ulysses": h.sp.p_ulysses,
+                         "p_ring": h.sp.p_ring,
+                         "hier_a2a": h.hier_a2a,
+                         "a2a_wire_dtype": h.a2a_wire_dtype},
+                "predicted_step_us": pred["t_step"] * 1e6,
+                "predicted_breakdown": {k: v for k, v in pred.items()
+                                        if k != "t_step"},
+                "overlap_efficiency": pred.get("overlap_efficiency"),
+                "measured_step_us": None,
+            })
+        out.append({
+            "name": f"hier_a2a_sweep/{wname}/N{n}/planner",
+            "n_machines": n,
+            "m_per_machine": M_PER_MACHINE,
+            "picked": {"cfg": best.cfg, "pp": best.pp,
+                       "p_ulysses": best.sp.p_ulysses,
+                       "p_ring": best.sp.p_ring,
+                       "hier_a2a": best.hier_a2a,
+                       "a2a_wire_dtype": best.a2a_wire_dtype},
+            "predicted_step_us": best_pred["t_step"] * 1e6,
+            "measured_step_us": None,
+        })
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibration", default=None, metavar="JSON",
+                    help="NetworkModel JSON from scripts/calibrate_comm.py")
+    args = ap.parse_args(argv)
+    net = load_network_model(args.calibration) if args.calibration else None
+    print("name,us_per_call,derived")
+    for line in run(net):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -106,6 +106,7 @@ def main(argv: list[str] | None = None) -> None:
         config_sweep,
         e2e_latency,
         fleet_sweep,
+        hier_a2a_sweep,
         hybrid_sweep,
         kernel_bench,
         layerwise,
@@ -122,6 +123,7 @@ def main(argv: list[str] | None = None) -> None:
         "kernel_bench (Fig 12)": kernel_bench,
         "roofline_table (assignment)": roofline_table,
         "hybrid_sweep (beyond-paper, DESIGN.md §7)": hybrid_sweep,
+        "hier_a2a_sweep (beyond-paper, DESIGN.md §8.2)": hier_a2a_sweep,
         "sched_sweep (beyond-paper, DESIGN.md §9)": sched_sweep,
         "fleet_sweep (beyond-paper, DESIGN.md §13)": fleet_sweep,
     }

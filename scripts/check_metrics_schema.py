@@ -34,6 +34,10 @@ sys.path.insert(0, str(ROOT / "src"))
 from repro.serving.metrics import SCHEMA_VERSION, validate_record  # noqa: E402
 
 BENCH_SCHEMA = "bench.v1"
+# step-level per-leg keys (core/comm_model.py PER_LEG_KEYS + "_step")
+PER_LEG_STEP_KEYS = ("t_a2a_inter_step", "t_a2a_intra_step",
+                     "t_ring_inter_step", "t_ring_intra_step",
+                     "t_codec_step")
 
 
 def check_metrics_jsonl(path: pathlib.Path,
@@ -75,6 +79,16 @@ def check_metrics_jsonl(path: pathlib.Path,
             if not (math.isfinite(d["t_start"]) and math.isfinite(d["value"])):
                 errs.append(f"{path}:{i}: span {d['name']} has a non-finite "
                             f"window ({d['t_start']}, {d['value']})")
+            if d.get("name") == "comm.leg":
+                # per-leg profiler spans (DESIGN.md §8.2/§12): each leg
+                # must identify its channel/stream (flat torus hop vs
+                # hier intra/inter leg) and its wire payload, or the
+                # trace report cannot fold legs into NetworkModel terms
+                tags = d.get("tags") or {}
+                for req in ("channel", "stream", "track", "nbytes"):
+                    if req not in tags:
+                        errs.append(f"{path}:{i}: comm.leg span missing "
+                                    f"tag {req!r}")
     if n == 0:
         errs.append(f"{path}: empty trace (no records)")
     return errs
@@ -101,6 +115,22 @@ def check_bench_json(path: pathlib.Path) -> list[str]:
     for j, rec in enumerate(data.get("records", [])):
         if "name" not in rec:
             errs.append(f"{path}: records[{j}] has no name")
+            continue
+        # per-leg comm terms (DESIGN.md §8.2): any record carrying a
+        # prediction breakdown must use the leg-split keys, never a
+        # single-blob a2a term; the hier sweep's variant records must
+        # carry the full split so flat-vs-hier is auditable per leg
+        bd = rec.get("predicted_breakdown")
+        if bd is None:
+            continue
+        if "t_a2a" in bd:
+            errs.append(f"{path}: records[{j}] has single-blob 't_a2a' "
+                        "(per-leg keys required)")
+        if data.get("module") == "hier_a2a_sweep":
+            missing = [k for k in PER_LEG_STEP_KEYS if k not in bd]
+            if missing:
+                errs.append(f"{path}: records[{j}] breakdown missing "
+                            f"per-leg fields {missing}")
     return errs
 
 

@@ -21,10 +21,21 @@ transfers through this package; this package imports nothing from core,
 so the dependency points one way.
 """
 from .channel import Channel, InFlight, fence, pin, ring_perm_of, shift_perm
+from .compress import (
+    dequantize,
+    ef_encode,
+    has_wire_dtype,
+    quantize,
+    zero_feedback,
+)
 from .pallas_backend import BACKENDS
 from .profiler import CommProfiler, emit_leg_spans, profile
 from .stream import (
     Stream,
+    hier_all_to_all,
+    hier_ungroup,
+    inter_hop,
+    intra_hop,
     pipe_handoff,
     ring_shift,
     staged_all_to_all,
@@ -54,12 +65,20 @@ __all__ = [
     "Stream",
     "TransferEvent",
     "ValidationReport",
+    "dequantize",
+    "ef_encode",
     "emit_leg_spans",
     "fence",
+    "has_wire_dtype",
+    "hier_all_to_all",
+    "hier_ungroup",
+    "inter_hop",
+    "intra_hop",
     "mark_compute",
     "pin",
     "pipe_handoff",
     "profile",
+    "quantize",
     "record",
     "ring_perm_of",
     "ring_shift",
@@ -69,4 +88,5 @@ __all__ = [
     "torus_hop",
     "validate",
     "validate_semaphores",
+    "zero_feedback",
 ]

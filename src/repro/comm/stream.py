@@ -12,6 +12,14 @@ shape.  The staged programs the SP schedules need are provided here:
   staged_all_to_all   — the full P_u-stage decomposition with the
                         stationary diagonal chunk (grouped_all_to_all)
   staged_ungroup      — its inverse (the Push-O / fourth all-to-all)
+  intra_hop/inter_hop — the two legs of the hierarchical a2a: distance-j
+                        rotation inside a machine sub-group / distance-k
+                        rotation across machine sub-groups (§8.2)
+  hier_all_to_all     — the two-level (intra-machine a2a, then staged
+                        inter-machine hops) decomposition of the Ulysses
+                        all-to-all; bit-identical output to the flat
+                        path, optionally fp8 on the inter-machine wire
+  hier_ungroup        — its inverse (the hierarchical Push-O)
   pipe_handoff        — the pipe-axis stage boundary transfer of the
                         displaced patch pipeline (models/dit.py)
 
@@ -32,10 +40,12 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from . import compress as _compress
 from .channel import Channel, InFlight, shift_perm
 
-__all__ = ["Stream", "ring_shift", "torus_hop", "staged_all_to_all",
-           "staged_ungroup", "pipe_handoff"]
+__all__ = ["Stream", "ring_shift", "torus_hop", "intra_hop", "inter_hop",
+           "staged_all_to_all", "staged_ungroup", "hier_all_to_all",
+           "hier_ungroup", "pipe_handoff"]
 
 
 @dataclasses.dataclass
@@ -93,6 +103,30 @@ def torus_hop(layout: Any, k: int, *tensors: jax.Array,
     stream = stream or Stream("torus", backend=backend, interpret=interpret)
     return stream.put(layout.axes, layout.ulysses_stage_perm(k), *tensors,
                       label=f"hop{k}", overlaps=overlaps)
+
+
+def intra_hop(layout: Any, j: int, *tensors: jax.Array,
+              stream: Stream | None = None,
+              overlaps: str = "", backend: str = "xla",
+              interpret: bool = True) -> InFlight:
+    """Distance-j hop inside the machine-local Ulysses sub-group (same
+    u_hi, same r): stage j of the hierarchical a2a's fast leg (§8.2).
+    Never crosses the slow boundary."""
+    stream = stream or Stream("hier", backend=backend, interpret=interpret)
+    return stream.put(layout.axes, layout.ulysses_intra_stage_perm(j),
+                      *tensors, label=f"intra{j}", overlaps=overlaps)
+
+
+def inter_hop(layout: Any, k: int, *tensors: jax.Array,
+              stream: Stream | None = None,
+              overlaps: str = "", backend: str = "xla",
+              interpret: bool = True) -> InFlight:
+    """Distance-k hop across machine sub-groups (same u_lo, same r):
+    stage k of the hierarchical a2a's slow leg — the only leg of the
+    two-level program that touches the inter-machine wire."""
+    stream = stream or Stream("hier", backend=backend, interpret=interpret)
+    return stream.put(layout.axes, layout.ulysses_inter_stage_perm(k),
+                      *tensors, label=f"inter{k}", overlaps=overlaps)
 
 
 def _dyn_set(buf: jax.Array, idx, val: jax.Array) -> jax.Array:
@@ -159,6 +193,142 @@ def staged_ungroup(
                          overlaps="next-layer compute").wait()
         out = _dyn_set(out, (u - k) % p_u, recv)
     return jnp.concatenate(list(out), axis=concat_axis)
+
+
+def _hier_exchange(
+    chunks: jax.Array,
+    layout: Any,
+    *,
+    stream: Stream,
+    wire_dtype: str | None = None,
+    err: tuple | None = None,
+    overlaps_inter: str = "peer inter hops + update fusions",
+) -> jax.Array | tuple[jax.Array, tuple]:
+    """Two-level routing core shared by hier_all_to_all / hier_ungroup.
+
+    ``chunks`` is [P_u, ...] in destination-u order (chunk j is what I owe
+    peer u = j); returns [P_u, ...] in source-u order (out[j] = what peer
+    u = j produced for me) — the exact contract of the flat staged path.
+
+    Factor u = u_hi * m_u + u_lo over (machine sub-group, local slot),
+    g = layout.u_groups, m_u = P_u / g.  Two legs:
+
+      fast leg (m_u - 1 intra stages): within each machine, local slot b
+        sends the whole [g]-bundle of chunks destined for local slot
+        (b + j) — after it, W[b'] holds the g chunks source (a, b')
+        produced for the b-slots of every machine sub-group.
+      slow leg (g - 1 inter stages): across machines, sub-group a sends
+        the [m_u]-bundle W[:, (a + k) % g] — m_u chunks aggregated into
+        one message, so the inter-machine wire sees g - 1 latency-paced
+        stages instead of the flat path's P_u - 1.
+
+    Both diagonals are stationary (the §4.3 observation, applied per
+    level).  The program is pure routing — no arithmetic touches the
+    payload — so the output is bit-identical to the flat path.  With
+    ``wire_dtype`` the slow leg quantises each bundle (compress.py)
+    before the put and dequantises on arrival; ``err`` (a tuple of g - 1
+    fp32 buffers) enables error feedback, in which case the new residuals
+    are returned alongside the output.
+    """
+    g = layout.u_groups
+    p_u = layout.p_ulysses
+    m_u = p_u // g
+    rest = chunks.shape[1:]
+    u, _ = layout.my_coords()
+    a, b = u // m_u, u % m_u
+    shaped = chunks.reshape((g, m_u) + rest)
+
+    # fast leg: intra-machine exchange of dest-local-slot bundles
+    w = jnp.zeros((m_u, g) + rest, chunks.dtype)
+    w = _dyn_set(w, b, jnp.take(shaped, b, axis=1))
+    for j in range(1, m_u):
+        send = jnp.take(shaped, (b + j) % m_u, axis=1)
+        recv = intra_hop(layout, j, send, stream=stream).wait()
+        w = _dyn_set(w, (b - j) % m_u, recv)
+
+    # slow leg: inter-machine exchange of per-sub-group bundles; every
+    # stage is independent of every other, so the whole leg can be in
+    # flight at once — the overlap declaration trace.validate checks
+    out = jnp.zeros((g, m_u) + rest, chunks.dtype)
+    out = _dyn_set(out, a, jnp.take(w, a, axis=1))
+    new_err = []
+    for k in range(1, g):
+        send = jnp.take(w, (a + k) % g, axis=1)
+        if wire_dtype is not None:
+            if err is not None:
+                wire, scale, e = _compress.ef_encode(
+                    send, err[k - 1], wire_dtype)
+                new_err.append(e)
+            else:
+                wire, scale = _compress.quantize(send, wire_dtype)
+            rw, rs = inter_hop(layout, k, wire, scale, stream=stream,
+                               overlaps=overlaps_inter).wait()
+            recv = _compress.dequantize(rw, rs, chunks.dtype)
+        else:
+            recv = inter_hop(layout, k, send, stream=stream,
+                             overlaps=overlaps_inter).wait()
+        out = _dyn_set(out, (a - k) % g, recv)
+    result = out.reshape((p_u,) + rest)
+    if err is not None:
+        return result, tuple(new_err)
+    return result
+
+
+def hier_all_to_all(
+    x: jax.Array,
+    layout: Any,
+    *,
+    split_axis: int,
+    stream: Stream | None = None,
+    backend: str = "xla",
+    interpret: bool = True,
+    wire_dtype: str | None = None,
+    err: tuple | None = None,
+) -> jax.Array | tuple[jax.Array, tuple]:
+    """Hierarchical two-level grouped all-to-all (§8.2): same contract as
+    :func:`staged_all_to_all` — split into P_u chunks along ``split_axis``,
+    deliver chunk j to ulysses-peer j, return received chunks stacked on a
+    new leading axis in source-u order — but routed as an intra-machine
+    a2a followed by g - 1 aggregated inter-machine hops."""
+    stream = stream or Stream("hier.a2a", backend=backend,
+                              interpret=interpret)
+    p_u = layout.p_ulysses
+    chunks = jnp.stack(jnp.split(x, p_u, axis=split_axis), axis=0)
+    if p_u == 1:
+        return chunks if err is None else (chunks, ())
+    return _hier_exchange(chunks, layout, stream=stream,
+                          wire_dtype=wire_dtype, err=err)
+
+
+def hier_ungroup(
+    stacked: jax.Array,
+    layout: Any,
+    *,
+    concat_axis: int,
+    stream: Stream | None = None,
+    backend: str = "xla",
+    interpret: bool = True,
+    wire_dtype: str | None = None,
+    err: tuple | None = None,
+) -> jax.Array | tuple[jax.Array, tuple]:
+    """Hierarchical inverse (§8.2): same contract as
+    :func:`staged_ungroup` — ``stacked[j]`` goes back to ulysses-peer j,
+    received chunks concatenate along ``concat_axis``.  The exchange core
+    is self-inverse (it is a transpose of the u coordinate), so this is
+    the same two-leg program with a concat epilogue."""
+    stream = stream or Stream("hier.a2a.inv", backend=backend,
+                              interpret=interpret)
+    p_u = layout.p_ulysses
+    if p_u == 1:
+        out = jnp.squeeze(stacked, axis=0)
+        return out if err is None else (out, ())
+    res = _hier_exchange(stacked, layout, stream=stream,
+                         wire_dtype=wire_dtype, err=err,
+                         overlaps_inter="next-layer compute")
+    if err is not None:
+        moved, new_err = res
+        return jnp.concatenate(list(moved), axis=concat_axis), new_err
+    return jnp.concatenate(list(res), axis=concat_axis)
 
 
 def pipe_handoff(

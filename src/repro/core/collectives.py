@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..comm import staged_all_to_all, staged_ungroup
+from ..comm import (hier_all_to_all, hier_ungroup, staged_all_to_all,
+                    staged_ungroup)
 
 AxisNames = tuple[str, ...]
 
@@ -56,10 +57,23 @@ class GroupLayout:
     p_ulysses: int
     p_ring: int
     ulysses_outer: bool  # True = SwiftFusion/TAS; False = USP
+    # Hierarchical a2a factorisation (DESIGN.md §8.2): number of machine
+    # sub-groups each Ulysses group is split into.  u_groups == 1 is the
+    # flat (monolithic or staged) a2a; u_groups == N decomposes every
+    # Ulysses transform into an intra-machine exchange followed by
+    # staged inter-machine hops.  Only meaningful with ulysses_outer
+    # (the u-blocks must be machine-contiguous); resolve_layout enforces
+    # the divisibility conditions.
+    u_groups: int = 1
 
     @property
     def size(self) -> int:
         return self.p_ulysses * self.p_ring
+
+    @property
+    def u_group_size(self) -> int:
+        """m_u: Ulysses-group members per machine sub-group."""
+        return self.p_ulysses // self.u_groups
 
     # -- static (python int) coordinates, used to build perm tables --------
     def coords(self, p: int) -> tuple[int, int]:
@@ -99,6 +113,38 @@ class GroupLayout:
                 )
         return out
 
+    def ulysses_intra_stage_perm(self, j: int) -> list[tuple[int, int]]:
+        """Stage ``j`` of the hierarchical a2a's *fast leg*: distance-j
+        rotation of the local coordinate u_lo = u % m_u inside each machine
+        sub-group (same u_hi, same r).  With u_groups == N and
+        ulysses_outer, every (u_hi, r) block is exactly one machine, so
+        this perm never crosses the slow boundary."""
+        g, m_u = self.u_groups, self.u_group_size
+        out = []
+        for hi in range(g):
+            for lo in range(m_u):
+                for r in range(self.p_ring):
+                    out.append((
+                        self.rank(hi * m_u + lo, r),
+                        self.rank(hi * m_u + (lo + j) % m_u, r),
+                    ))
+        return out
+
+    def ulysses_inter_stage_perm(self, k: int) -> list[tuple[int, int]]:
+        """Stage ``k`` of the hierarchical a2a's *slow leg*: distance-k
+        rotation of the machine coordinate u_hi = u // m_u (same u_lo,
+        same r) — the only leg that touches the inter-machine wire."""
+        g, m_u = self.u_groups, self.u_group_size
+        out = []
+        for hi in range(g):
+            for lo in range(m_u):
+                for r in range(self.p_ring):
+                    out.append((
+                        self.rank(hi * m_u + lo, r),
+                        self.rank(((hi + k) % g) * m_u + lo, r),
+                    ))
+        return out
+
     def seq_offset_of_rank(self, shard_len: int) -> jax.Array:
         """Global sequence offset of *this* device's original shard."""
         return flat_rank(self.axes) * shard_len
@@ -129,6 +175,7 @@ def grouped_all_to_all(
     stack_axis: int = 0,
     backend: str = "xla",
     interpret: bool = True,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """All-to-all restricted to Ulysses groups of ``layout``.
 
@@ -139,8 +186,16 @@ def grouped_all_to_all(
 
     Implemented as P_u - 1 one-sided channel stages (comm.stream).  The
     diagonal chunk (j == my u) is **stationary** — the paper's §4.3
-    observation — and never moves.
+    observation — and never moves.  With ``layout.u_groups > 1`` the
+    exchange runs the hierarchical two-level program instead (DESIGN.md
+    §8.2): an intra-machine a2a followed by staged inter-machine hops,
+    bit-identical output (pure routing, no arithmetic), optionally with
+    fp8 on the inter-machine wire.
     """
+    if layout.u_groups > 1:
+        return hier_all_to_all(x, layout, split_axis=split_axis,
+                               backend=backend, interpret=interpret,
+                               wire_dtype=wire_dtype)
     return staged_all_to_all(x, layout, split_axis=split_axis,
                              backend=backend, interpret=interpret)
 
@@ -148,14 +203,21 @@ def grouped_all_to_all(
 def monolithic_all_to_all(
     x: jax.Array, layout: GroupLayout, *, split_axis: int,
     backend: str = "xla", interpret: bool = True,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """Baseline atomic all-to-all (what Ulysses does before Torus).
 
     Same contract as :func:`grouped_all_to_all`.  Uses ``lax.all_to_all``
     when the ulysses group covers the whole flattened SP axis; otherwise
     falls back to the staged implementation (XLA's all_to_all has no
-    subgroup support over a partial logical factor of a named axis).
+    subgroup support over a partial logical factor of a named axis).  A
+    hierarchical layout (``u_groups > 1``) always takes the two-level
+    staged program — that is the point of the decomposition.
     """
+    if layout.u_groups > 1:
+        return hier_all_to_all(x, layout, split_axis=split_axis,
+                               backend=backend, interpret=interpret,
+                               wire_dtype=wire_dtype)
     if (layout.p_ring == 1 and layout.p_ulysses == layout.size
             and backend == "xla"):
         chunks = jnp.stack(jnp.split(x, layout.p_ulysses, axis=split_axis), axis=0)
@@ -171,6 +233,7 @@ def monolithic_all_to_all(
 def ungroup_all_to_all(
     stacked: jax.Array, layout: GroupLayout, *, concat_axis: int,
     backend: str = "xla", interpret: bool = True,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """Inverse transform: send ``stacked[j]`` back to ulysses-peer j and
     concatenate the received chunks along ``concat_axis`` (the fourth
@@ -178,6 +241,10 @@ def ungroup_all_to_all(
     p_u = layout.p_ulysses
     if p_u == 1:
         return jnp.squeeze(stacked, axis=0)
+    if layout.u_groups > 1:
+        return hier_ungroup(stacked, layout, concat_axis=concat_axis,
+                            backend=backend, interpret=interpret,
+                            wire_dtype=wire_dtype)
     if (layout.p_ring == 1 and layout.p_ulysses == layout.size
             and backend == "xla"):
         moved = lax.all_to_all(

@@ -51,20 +51,129 @@ def swift_inter_volume(plan: SPPlan, blhd: float) -> float:
     return (2.0 * (g - 1) + 4.0 * (p_u - 1) / p_u * g) * blhd / n
 
 
-def intra_volume(plan: SPPlan, blhd: float, *, swift: bool) -> float:
-    """Intra-machine elements per GPU (not in the paper's appendix; derived
-    the same way).  Swift runs Ring intra-machine (volume 2·(Pr-1)/Pr·BLHD
-    restricted to the machine's L/N slice per step ... aggregated), USP runs
-    Ulysses intra-machine."""
+def hierarchical_applicable(plan: SPPlan) -> bool:
+    """Whether the hierarchical two-level a2a (DESIGN.md §8.2) applies to
+    this plan: the Ulysses groups must span machines (ulysses-outer
+    placement, N > 1) with more than one member per machine (P_u > N) and
+    an exact machine factorisation (N | P_u) so u-blocks are machine-
+    contiguous.  Degenerate cases fall back to the flat path."""
+    n, p_u = plan.n_machines, plan.p_ulysses
+    return plan.ulysses_inter and n > 1 and p_u > n and p_u % n == 0
+
+
+def a2a_leg_volumes(plan: SPPlan, blhd: float, *, swift: bool,
+                    hierarchical: bool = False) -> dict[str, float]:
+    """Per-leg element volumes of the four Ulysses all-to-alls (Q, K, V,
+    O), split by the boundary each leg crosses — the decomposition that
+    replaces the old single-blob a2a term.
+
+    Derivation (per-machine NIC convention of Appendix D, cross-checked
+    against eq. 4/6 in tests/test_comm_model.py): each device holds
+    BLHD/(N·M) elements per tensor, so a machine's share per tensor is
+    BLHD/N.  The a2a moves chunk j of P_u to ulysses-peer j; with
+    m_u = P_u/N group members per machine (swift, P_u >= N):
+
+      flat a2a:     (P_u - m_u)/P_u of every chunk crosses machines
+                    -> inter = 4·(P_u - m_u)/P_u · BLHD/N (== eq. 6),
+                    (m_u - 1)/P_u stays on NVLink
+                    -> intra = 4·(m_u - 1)/P_u · BLHD/N.
+      hierarchical: the intra leg exchanges FULL dest-machine bundles
+                    (every chunk traverses NVLink once)
+                    -> intra = 4·(m_u - 1)/m_u · BLHD/N,
+                    the inter leg moves exactly the same remote chunks
+                    as flat (aggregated m_u per message)
+                    -> inter = 4·(P_u - m_u)/P_u · BLHD/N (unchanged).
+
+    The hierarchical win is therefore NOT in volume (it pays ~m_u× more
+    NVLink traffic) but in inter-message count — g - 1 paced hops instead
+    of P_u - 1 — which is a latency term, priced per-leg in
+    ``attention_layer_latency``.
+    """
     n, m = plan.n_machines, plan.m_per_machine
     p_u, p_r = plan.p_ulysses, plan.p_ring
-    if m == 1:
-        return 0.0
+    if p_u == 1:
+        return {"a2a_intra": 0.0, "a2a_inter": 0.0}
+    if not swift:
+        # USP: Ulysses stays inside the machine (eq. 5's a2a term covers
+        # the P_r < N spill-over case where Ulysses crosses too).
+        u_intra = min(p_u, m)
+        intra = 4.0 * (u_intra - 1) / u_intra * blhd / n if m > 1 else 0.0
+        inter = 0.0
+        if n > 1 and p_r < n:
+            g = n / p_r
+            inter = 4.0 * (g - 1) / g * blhd / n
+        return {"a2a_intra": intra, "a2a_inter": inter}
+    if n == 1:
+        return {"a2a_intra": 4.0 * (p_u - 1) / p_u * blhd,
+                "a2a_inter": 0.0}
+    if p_u < n:
+        # eq. 7 regime: one group member per machine cluster — the a2a is
+        # purely inter with degree g = N/P_u; hierarchy cannot apply.
+        g = n / p_u
+        return {"a2a_intra": 0.0,
+                "a2a_inter": 4.0 * (p_u - 1) / p_u * g * blhd / n}
+    # group members per machine; kept continuous so the inter share
+    # reduces to eq. 6's 4*(N-1)/N*BLHD/N even when N does not divide P_u
+    # (eq. 6's even-distribution idealisation — the hierarchical branch,
+    # which needs exact machine blocks, is gated on divisibility anyway)
+    m_u = p_u / n
+    inter = 4.0 * (p_u - m_u) / p_u * blhd / n
+    if hierarchical and hierarchical_applicable(plan):
+        intra = 4.0 * (m_u - 1) / m_u * blhd / n
+    else:
+        intra = 4.0 * (m_u - 1) / p_u * blhd / n
+    return {"a2a_intra": intra, "a2a_inter": inter}
+
+
+def ring_leg_volumes(plan: SPPlan, blhd: float, *, swift: bool
+                     ) -> dict[str, float]:
+    """Per-leg element volumes of the Ring circulation (K and V), split by
+    boundary.  Total receive volume per machine is 2·(P_r - 1)·BLHD/N
+    (each of M devices receives P_r - 1 KV chunks of BLHD/(N·M) each, K
+    and V both); the inter share is the paper's eq. 4/6/7 ring term and
+    the intra share is the complement, floored at zero for the P_r < N
+    regime where re-entry makes the inter term exceed the single-pass
+    total."""
+    n = plan.n_machines
+    p_u, p_r = plan.p_ulysses, plan.p_ring
+    if p_r == 1:
+        return {"ring_intra": 0.0, "ring_inter": 0.0}
+    total = 2.0 * (p_r - 1) * blhd / n
+    if n == 1:
+        return {"ring_intra": total, "ring_inter": 0.0}
     if swift:
-        r_intra = min(p_r, m)
-        return 2.0 * (r_intra - 1) * blhd / n / max(r_intra, 1) * r_intra
-    u_intra = min(p_u, m)
-    return 4.0 * (u_intra - 1) / u_intra * blhd / n
+        # ring crosses machines only when Ulysses is too small to cover
+        # them (eq. 7's first term, g = N / P_u machine clusters)
+        inter = 2.0 * (n / p_u - 1) * blhd / n if p_u < n else 0.0
+    else:
+        if p_r >= n:
+            inter = 2.0 * (n - 1) * blhd / n  # eq. 4
+        else:
+            inter = 2.0 * (p_r - 1) * (n / p_r) * blhd / n  # eq. 5 term
+    return {"ring_intra": max(total - inter, 0.0), "ring_inter": inter}
+
+
+def intra_volume(plan: SPPlan, blhd: float, *, swift: bool,
+                 hierarchical: bool = False) -> float:
+    """Intra-machine elements per GPU (not in the paper's appendix; derived
+    the same way): the a2a's intra-machine share plus the Ring's.
+
+    Bug history: this used to be ``2·(min(P_r, M) - 1)·BLHD/N`` for swift
+    — via a self-cancelling ``/ max(r_intra, 1) * r_intra`` factor — which
+    is correct for P_r <= M (ring entirely inside the machine) but
+    undercounts the P_r > M regime: there the ring spans g_r = P_r·N/SP
+    machine segments and the intra share is the eq.-7 complement
+    2·(P_r - g_r)·BLHD/N, not 2·(M - 1)·BLHD/N.  Both regimes (and the
+    flat-a2a intra share this blob used to drop entirely) now come from
+    the per-leg decomposition; tests/test_comm_model.py pins the
+    derivation against the eq. 4/6 limits at P_r = M and N = 1.
+    """
+    if plan.m_per_machine == 1:
+        return 0.0
+    legs = a2a_leg_volumes(plan, blhd, swift=swift,
+                           hierarchical=hierarchical)
+    rlegs = ring_leg_volumes(plan, blhd, swift=swift)
+    return legs["a2a_intra"] + rlegs["ring_intra"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +197,18 @@ class NetworkModel:
     # kernel path ("pallas", DESIGN.md §8.1) issues the put from inside
     # the attention kernel and pays none of it.
     step_issue_overhead: float = 2e-6  # s per inter-op transfer step
+    # Per-leg a2a terms (DESIGN.md §8.2).  The staged a2a's intra-machine
+    # leg rides NVLink but with a different message shape than the ring
+    # (full dest-machine bundles vs one KV chunk), so its achieved
+    # bandwidth calibrates separately from intra_bw; inter_hop_lat is the
+    # per-MESSAGE cost of an inter-machine a2a stage (NIC processing +
+    # wire latency that does not pipeline across messages) — this is the
+    # term the hierarchical path shrinks from P_u - 1 to N - 1 messages;
+    # codec_bw is the on-device quantise+dequantise throughput of the
+    # fp8 wire codec (comm/compress.py).
+    a2a_intra_bw: float = 4.9e11  # B/s intra-machine a2a leg per device
+    inter_hop_lat: float = 1e-5  # s per inter-machine a2a message
+    codec_bw: float = 2.0e12  # B/s fp8 encode/decode throughput
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +237,8 @@ def attention_layer_latency(
     overlap_intra: bool = True,
     one_sided: bool = False,
     fused_comm: bool = False,
+    hierarchical: bool = False,
+    wire_dtype: str | None = None,
 ) -> dict[str, float]:
     """Estimate one distributed attention layer's latency components.
 
@@ -133,32 +256,80 @@ def attention_layer_latency(
     issue gap (``net.step_issue_overhead`` per ring step / a2a stage)
     disappears — the kernel-fused analogue of the paper's in-kernel
     NVSHMEM puts.
+
+    ``hierarchical`` scores the two-level a2a (DESIGN.md §8.2) when
+    :func:`hierarchical_applicable` holds for the plan (no-op otherwise);
+    ``wire_dtype`` prices fp8 compression of the inter-machine a2a leg
+    (halved wire bytes, plus a codec term).  The returned dict carries
+    every leg separately — ``t_a2a_intra``/``t_a2a_inter``/
+    ``t_ring_intra``/``t_ring_inter``/``t_codec`` — with the legacy
+    ``t_inter``/``t_intra`` as their sums, so no single-blob a2a term
+    remains in the scoring.
     """
-    inter_v = (swift_inter_volume if swift else usp_inter_volume)(plan, wl.blhd)
-    intra_v = intra_volume(plan, wl.blhd, swift=swift)
+    hier = hierarchical and hierarchical_applicable(plan)
+    a2a = a2a_leg_volumes(plan, wl.blhd, swift=swift, hierarchical=hier)
+    ring = ring_leg_volumes(plan, wl.blhd, swift=swift)
     b = net.bytes_per_elem
-    t_inter = inter_v * b / net.inter_bw + (plan.n_machines > 1) * net.inter_lat
-    t_intra = intra_v * b / net.intra_bw + (plan.m_per_machine > 1) * net.intra_lat
+    compressed = wire_dtype is not None and a2a["a2a_inter"] > 0.0
+    wire_b = 1 if compressed else b  # fp8 wire formats are 1 byte/elem
+
+    # a2a message counts per layer: the flat staged path paces P_u - 1
+    # messages on the Ulysses boundary; the hierarchical path splits them
+    # into m_u - 1 fast-leg + N - 1 slow-leg messages.
+    p_u, n = plan.p_ulysses, plan.n_machines
+    if hier:
+        a2a_inter_msgs = n - 1
+        a2a_intra_msgs = p_u // n - 1
+    elif plan.ulysses_inter and n > 1:
+        a2a_inter_msgs = max(p_u - 1, 0)
+        a2a_intra_msgs = 0
+    else:
+        a2a_inter_msgs = 0
+        a2a_intra_msgs = max(p_u - 1, 0)
+
+    t_a2a_inter = (a2a["a2a_inter"] * wire_b / net.inter_bw
+                   + a2a_inter_msgs * net.inter_hop_lat)
+    t_a2a_intra = (a2a["a2a_intra"] * b / net.a2a_intra_bw
+                   + a2a_intra_msgs * net.intra_lat)
+    t_ring_inter = ring["ring_inter"] * b / net.inter_bw
+    t_ring_intra = ring["ring_intra"] * b / net.intra_bw
+    # encode on the sender + decode on the receiver, priced against the
+    # uncompressed payload (the codec reads/writes the full-width tensor)
+    t_codec = (2.0 * a2a["a2a_inter"] * b / net.codec_bw) if compressed else 0.0
+
+    inter_v = a2a["a2a_inter"] + ring["ring_inter"]
+    intra_v = a2a["a2a_intra"] + ring["ring_intra"]
+    t_inter = (t_a2a_inter + t_ring_inter
+               + (plan.n_machines > 1) * net.inter_lat)
+    t_intra = (t_a2a_intra + t_ring_intra
+               + (plan.m_per_machine > 1) * net.intra_lat)
     t_comp = wl.attention_flops() / plan.sp_degree / (net.flops * net.mfu)
     ring_steps = max(plan.p_ring - 1, 0)
-    a2a_stages = max(plan.p_ulysses - 1, 0)
+    a2a_stages = a2a_inter_msgs + a2a_intra_msgs
     if one_sided:
         t_sync = 2 * (net.inter_lat if plan.n_machines > 1 else net.intra_lat)
     else:
-        inter_steps = a2a_stages if plan.ulysses_inter else ring_steps
-        intra_steps = ring_steps if plan.ulysses_inter else a2a_stages
+        inter_steps = (a2a_inter_msgs
+                       + ring_steps * (not plan.ulysses_inter))
+        intra_steps = (a2a_intra_msgs
+                       + ring_steps * plan.ulysses_inter)
         t_sync = (inter_steps * net.inter_lat * (plan.n_machines > 1)
                   + intra_steps * net.intra_lat * (plan.m_per_machine > 1))
     t_issue = (0.0 if fused_comm
                else (ring_steps + a2a_stages) * net.step_issue_overhead)
     exposed_intra = 0.0 if overlap_intra else t_intra
     exposed_inter = max(0.0, t_inter - t_comp) if overlap_inter else t_inter
-    total = t_comp + exposed_inter + exposed_intra + t_sync + t_issue
+    total = t_comp + exposed_inter + exposed_intra + t_sync + t_issue + t_codec
     hideable = t_inter + t_intra
     return {
         "t_compute": t_comp,
         "t_inter": t_inter,
         "t_intra": t_intra,
+        "t_a2a_inter": t_a2a_inter,
+        "t_a2a_intra": t_a2a_intra,
+        "t_ring_inter": t_ring_inter,
+        "t_ring_intra": t_ring_intra,
+        "t_codec": t_codec,
         "t_sync": t_sync,
         "t_issue": t_issue,
         "t_total": total,
@@ -171,6 +342,7 @@ def attention_layer_latency(
                                / hideable) if hideable > 0 else 1.0,
         "inter_elems": inter_v,
         "intra_elems": intra_v,
+        "hierarchical": float(hier),
     }
 
 
@@ -202,6 +374,19 @@ def pipefusion_boundary_volume(wl: LayerWorkload, pp: int) -> float:
     return float(wl.batch * wl.seq * wl.heads * wl.head_dim)
 
 
+# step-level dict keys carrying each comm leg (DESIGN.md §8.2): the
+# scheduler and the bench records see the same decomposition the layer
+# model scores with — no single-blob a2a term anywhere downstream either
+PER_LEG_KEYS = ("t_a2a_inter", "t_a2a_intra", "t_ring_inter",
+                "t_ring_intra", "t_codec")
+
+
+def _per_leg_step(lat: dict[str, float], mult: float) -> dict[str, float]:
+    out = {f"{k}_step": mult * lat[k] for k in PER_LEG_KEYS}
+    out["hierarchical"] = lat["hierarchical"]
+    return out
+
+
 def sp_step_latency(
     plan: SPPlan,
     wl: LayerWorkload,
@@ -212,6 +397,8 @@ def sp_step_latency(
     guidance_branches: int = 2,
     swift: bool = True,
     comm_backend: str = "xla",
+    hierarchical: bool = False,
+    wire_dtype: str | None = None,
 ) -> dict[str, float]:
     """Predicted per-sampler-step latency of pure SP serving: ``n_layers``
     distributed attention layers (Torus overlap + one-sided sync), times
@@ -219,16 +406,19 @@ def sp_step_latency(
     sequentially."""
     lat = attention_layer_latency(
         plan, wl, net, swift=swift, overlap_inter=True, one_sided=True,
-        fused_comm=comm_backend == "pallas")
+        fused_comm=comm_backend == "pallas",
+        hierarchical=hierarchical, wire_dtype=wire_dtype)
     branches = guidance_branches if guided else 1
+    mult = branches * n_layers
     return {
-        "t_step": branches * n_layers * lat["t_total"],
+        "t_step": mult * lat["t_total"],
         "t_layer": lat["t_total"],
-        "t_compute_step": branches * n_layers * lat["t_compute"],
-        "t_issue_step": branches * n_layers * lat["t_issue"],
+        "t_compute_step": mult * lat["t_compute"],
+        "t_issue_step": mult * lat["t_issue"],
         "overlap_efficiency": lat["overlap_efficiency"],
         "branches": float(branches),
-        "inter_elems_step": branches * n_layers * lat["inter_elems"],
+        "inter_elems_step": mult * lat["inter_elems"],
+        **_per_leg_step(lat, mult),
     }
 
 
@@ -244,6 +434,8 @@ def hybrid_step_latency(
     num_steps: int = 20,
     overlap_pp: bool = True,
     comm_backend: str = "xla",
+    hierarchical: bool = False,
+    wire_dtype: str | None = None,
 ) -> dict[str, float]:
     """Predicted per-sampler-step latency of the (cfg, pp, P_u, P_r) plan.
 
@@ -267,7 +459,8 @@ def hybrid_step_latency(
     lat = attention_layer_latency(
         sub, wl, net, swift=sub.n_machines > 1,
         overlap_inter=True, one_sided=True,
-        fused_comm=comm_backend == "pallas")
+        fused_comm=comm_backend == "pallas",
+        hierarchical=hierarchical, wire_dtype=wire_dtype)
     branches = guidance_branches if (guided and hplan.cfg == 1) else 1
     t_layers = branches * (n_layers / hplan.pp) * lat["t_total"]
 
@@ -303,6 +496,7 @@ def hybrid_step_latency(
                                 if hplan.pp_inter else 0.0)
                              + (cfg_recombine_volume(wl)
                                 if guided and hplan.cfg_inter else 0.0)),
+        **_per_leg_step(lat, layer_mult),
     }
 
 
@@ -334,17 +528,26 @@ def plan_step_latency(
     schedule, which drops the per-step issue overhead — this is how the
     planner and the scheduler's plan cache prefer the fused path when it
     wins.
+
+    ``hplan.hier_a2a`` / ``hplan.a2a_wire_dtype`` select the hierarchical
+    two-level a2a and its fp8 wire compression (DESIGN.md §8.2); both
+    thread down to ``attention_layer_latency``'s per-leg terms so flat and
+    hierarchical candidates for the same (P_u, P_r) score differently.
     """
     cb = comm_backend if comm_backend is not None else hplan.comm_backend
+    hier = hplan.hier_a2a
+    wire = hplan.a2a_wire_dtype
     if hplan.cfg == 1 and hplan.pp == 1:
         return sp_step_latency(
             hplan.sp, wl, net, n_layers=n_layers, guided=guided,
             guidance_branches=guidance_branches,
-            swift=hplan.sp.ulysses_inter, comm_backend=cb)
+            swift=hplan.sp.ulysses_inter, comm_backend=cb,
+            hierarchical=hier, wire_dtype=wire)
     return hybrid_step_latency(
         hplan, wl, net, n_layers=n_layers, guided=guided,
         guidance_branches=guidance_branches, num_patches=num_patches,
-        num_steps=num_steps, comm_backend=cb)
+        num_steps=num_steps, comm_backend=cb,
+        hierarchical=hier, wire_dtype=wire)
 
 
 # NetworkModel fields the calibration fitter treats as free parameters
@@ -352,7 +555,11 @@ def plan_step_latency(
 # OnlineCalibrator).  flops and bytes_per_elem are hardware constants;
 # step_issue_overhead is calibrated on-TPU (ROADMAP Pallas item), not from
 # step-latency records, which cannot separate it from the hop latencies.
-FIT_PARAMS = ("intra_bw", "inter_bw", "intra_lat", "inter_lat", "mfu")
+# The per-leg a2a parameters (DESIGN.md §8.2) join the fit: sweeps that
+# never exercise the hierarchical path leave them unidentifiable and the
+# fitter's damping holds their ratios at 1.0.
+FIT_PARAMS = ("intra_bw", "inter_bw", "intra_lat", "inter_lat", "mfu",
+              "a2a_intra_bw", "inter_hop_lat", "codec_bw")
 
 
 def fit_param_ratios(net: NetworkModel,

@@ -126,6 +126,14 @@ class HybridPlan:
     # comm_model.plan_step_latency and selects the fused ring kernel via
     # SPConfig.comm_backend at execution time.
     comm_backend: str = "xla"
+    # Hierarchical two-level a2a (DESIGN.md §8.2): decompose the Ulysses
+    # all-to-alls into intra-machine exchange + staged inter-machine hops.
+    # Only meaningful when comm_model.hierarchical_applicable(sp) holds —
+    # the executor and the latency model both fall back to the flat path
+    # otherwise.  a2a_wire_dtype optionally compresses the inter-machine
+    # leg ("float8_e4m3fn"/"float8_e5m2"); None keeps the wire exact.
+    hier_a2a: bool = False
+    a2a_wire_dtype: str | None = None
 
     @property
     def total_devices(self) -> int:
@@ -145,6 +153,10 @@ class HybridPlan:
         assert self.cfg >= 1, self
         assert self.pp >= 1, self
         assert self.comm_backend in ("xla", "pallas"), self
+        if self.a2a_wire_dtype is not None:
+            from ..comm.compress import WIRE_DTYPES
+            assert self.a2a_wire_dtype in WIRE_DTYPES, self
+            assert self.hier_a2a, "wire compression rides the hier path only"
         self.sp.validate()
         assert self.total_devices == self.n_machines * self.m_per_machine, self
 
@@ -174,6 +186,8 @@ def plan_hybrid(
     swift: bool = True,
     replicate_kv: bool = False,
     comm_backend: str = "xla",
+    hier_a2a: bool = False,
+    a2a_wire_dtype: str | None = None,
 ) -> HybridPlan:
     """Plan (cfg, pp, P_u, P_r) for N machines × M chips.
 
@@ -183,6 +197,11 @@ def plan_hybrid(
     the surviving machine boundary, Ring inside the machine).
     ``cfg_degree`` is the guidance degree k consumed by the cfg axis when
     ``cfg_parallel`` (k = 2 is the classic cond/uncond pair).
+
+    ``hier_a2a`` requests the hierarchical two-level a2a on the SP
+    sub-plan; it is silently dropped (flat plan returned) when the
+    residual sub-mesh's topology does not qualify, so callers can pass it
+    unconditionally.
     """
     if cfg_parallel:
         assert cfg_degree >= 2, cfg_degree
@@ -198,11 +217,16 @@ def plan_hybrid(
     n, m, pp_mach = _consume(n, m, pp)
     sp = plan(n, m, num_q_heads, num_kv_heads, swift=swift,
               replicate_kv=replicate_kv)
+    if hier_a2a:
+        from .comm_model import hierarchical_applicable
+        if not hierarchical_applicable(sp):
+            hier_a2a, a2a_wire_dtype = False, None
     h = HybridPlan(
         cfg=cfg, pp=pp, sp=sp,
         n_machines=n_machines, m_per_machine=m_per_machine,
         cfg_machines=cfg_mach, pp_machines=pp_mach,
         comm_backend=comm_backend,
+        hier_a2a=hier_a2a, a2a_wire_dtype=a2a_wire_dtype,
     )
     h.validate()
     return h
@@ -224,15 +248,30 @@ def candidate_hybrid_plans(
     swift: bool = True,
     replicate_kv: bool = False,
     comm_backend: str = "xla",
+    a2a_wire_dtype: str | None = None,
 ) -> list[HybridPlan]:
     """Every feasible (cfg, pp) split of the cluster, deduplicated by the
-    resulting (cfg, pp, P_u, P_r) — the candidate set ``plan_for_shape``
-    and the scheduler's plan cache score per bucket.  Each candidate's SP
-    sub-plan keeps the §4.2 TAS/Torus placement."""
+    resulting (cfg, pp, P_u, P_r, hier) — the candidate set
+    ``plan_for_shape`` and the scheduler's plan cache score per bucket.
+    Each candidate's SP sub-plan keeps the §4.2 TAS/Torus placement; when
+    the residual sub-mesh qualifies, a hierarchical-a2a variant of the
+    same factorisation is emitted alongside the flat one (with
+    ``a2a_wire_dtype`` compression when requested), so flat-vs-hier is a
+    scored decision per topology, not a config toggle."""
+    from .comm_model import hierarchical_applicable
+
     pps = [1]
     while pps[-1] * 2 <= max_pp:
         pps.append(pps[-1] * 2)
     seen, out = set(), []
+
+    def add(h: HybridPlan) -> None:
+        key = (h.cfg, h.pp, h.sp.p_ulysses, h.sp.p_ring,
+               h.hier_a2a, h.a2a_wire_dtype)
+        if key not in seen:
+            seen.add(key)
+            out.append(h)
+
     for cfg_parallel in (False, True):
         for pp in pps:
             try:
@@ -243,10 +282,12 @@ def candidate_hybrid_plans(
                     comm_backend=comm_backend)
             except ValueError:
                 continue
-            key = (h.cfg, h.pp, h.sp.p_ulysses, h.sp.p_ring)
-            if key not in seen:
-                seen.add(key)
-                out.append(h)
+            add(h)
+            if hierarchical_applicable(h.sp):
+                add(dataclasses.replace(h, hier_a2a=True))
+                if a2a_wire_dtype is not None:
+                    add(dataclasses.replace(
+                        h, hier_a2a=True, a2a_wire_dtype=a2a_wire_dtype))
     return out
 
 
@@ -269,6 +310,7 @@ def plan_for_shape(
     max_pp: int = 4,
     swift: bool = True,
     comm_backend: str = "xla",
+    a2a_wire_dtype: str | None = None,
 ) -> tuple[HybridPlan, dict]:
     """Select the (cfg, pp, P_u, P_r) plan with the lowest predicted step
     latency FOR A SPECIFIC WORKLOAD SHAPE (batch, seq) — the per-bucket
@@ -282,7 +324,7 @@ def plan_for_shape(
     cands = candidates if candidates is not None else candidate_hybrid_plans(
         n_machines, m_per_machine, num_q_heads, num_kv_heads,
         n_layers=n_layers, cfg_degree=cfg_degree, max_pp=max_pp, swift=swift,
-        comm_backend=comm_backend)
+        comm_backend=comm_backend, a2a_wire_dtype=a2a_wire_dtype)
     assert cands, "no feasible hybrid plan"
     wl = LayerWorkload(batch=batch, seq=seq, heads=num_q_heads,
                        head_dim=head_dim)

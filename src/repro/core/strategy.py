@@ -71,10 +71,23 @@ class SPConfig:
     # interpreter mode — required on CPU (the CI path), off on real TPUs.
     comm_backend: str = "xla"
     kernel_interpret: bool = True
+    # Hierarchical a2a (DESIGN.md §8.2): decompose every Ulysses
+    # all-to-all into an intra-machine exchange plus staged inter-machine
+    # hops whenever the Ulysses groups span machines (engages only when
+    # the topology qualifies: ulysses-outer placement, N > 1, N | P_u,
+    # P_u > N — otherwise the flat path runs unchanged).  a2a_wire_dtype
+    # compresses the inter-machine leg ("float8_e4m3fn"/"float8_e5m2",
+    # comm/compress.py); None keeps the wire exact, which is what makes
+    # the hierarchical path bit-compatible with the flat one.
+    hier_a2a: bool = False
+    a2a_wire_dtype: str | None = None
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
         assert self.comm_backend in ("xla", "pallas"), self.comm_backend
+        if self.a2a_wire_dtype is not None:
+            from ..comm.compress import WIRE_DTYPES
+            assert self.a2a_wire_dtype in WIRE_DTYPES, self.a2a_wire_dtype
 
     def effective_batch_axes(
         self, mesh: jax.sharding.Mesh | None = None
@@ -100,6 +113,17 @@ def resolve_layout(
     sp = math.prod(mesh.shape[a] for a in cfg.sp_axes)
     n = mesh.shape[cfg.machine_axis] if cfg.machine_axis in cfg.sp_axes else 1
     m = sp // n
+
+    def u_groups(p_u: int, outer: bool) -> int:
+        # Hierarchical decomposition applies when the Ulysses groups span
+        # the machine boundary with > 1 member per machine: u-blocks are
+        # then machine-contiguous (block size (P_u/N)·P_r = M) and the
+        # two-level factorisation u = u_hi·m_u + u_lo is exact.
+        if (cfg.hier_a2a and outer and n > 1 and p_u > n
+                and p_u % n == 0):
+            return n
+        return 1
+
     if cfg.strategy == "ring":
         return GroupLayout(cfg.sp_axes, 1, sp, ulysses_outer=True)
     if cfg.strategy == "ulysses":
@@ -108,21 +132,24 @@ def resolve_layout(
             raise ValueError(
                 f"ulysses needs SP ({sp}) | heads ({heads}); use usp/swift instead"
             )
-        return GroupLayout(cfg.sp_axes, sp, 1, ulysses_outer=True)
+        return GroupLayout(cfg.sp_axes, sp, 1, ulysses_outer=True,
+                           u_groups=u_groups(sp, True))
     swift = cfg.strategy in ("swift", "swift_torus")
     pl = planner.plan(
         n, m, num_q_heads, num_kv_heads, swift=swift, replicate_kv=cfg.replicate_kv
     )
-    return GroupLayout(cfg.sp_axes, pl.p_ulysses, pl.p_ring, ulysses_outer=swift)
+    return GroupLayout(cfg.sp_axes, pl.p_ulysses, pl.p_ring, ulysses_outer=swift,
+                       u_groups=u_groups(pl.p_ulysses, swift))
 
 
 def _usp_like(q, k, v, layout: GroupLayout, *, scale, causal, window, unroll,
-              kv_block=None, backend="xla", interpret=True):
+              kv_block=None, backend="xla", interpret=True, wire_dtype=None):
     """Shared body for usp/swift/ulysses/ring: monolithic Ulysses gather →
     Ring Attention → scatter.  The layout decides which boundary each
     technique crosses (that single bit is the paper's §4.2 contribution)."""
     ls = q.shape[1]
-    g = gather_qkv(q, k, v, layout, backend=backend, interpret=interpret)
+    g = gather_qkv(q, k, v, layout, backend=backend, interpret=interpret,
+                   wire_dtype=wire_dtype)
     kpos_fn = lambda owner_r: group_positions(layout, ls, owner_r)
     part = ring_attention(
         g.q, g.k, g.v, layout,
@@ -131,7 +158,8 @@ def _usp_like(q, k, v, layout: GroupLayout, *, scale, causal, window, unroll,
         kv_block=kv_block, backend=backend, interpret=interpret,
     )
     return scatter_o(finalize(part, dtype=q.dtype), layout,
-                     backend=backend, interpret=interpret)
+                     backend=backend, interpret=interpret,
+                     wire_dtype=wire_dtype)
 
 
 def sp_attention(
@@ -170,12 +198,14 @@ def sp_attention(
             window=window, unroll=cfg.unroll_ring,
             fused_pull_q=cfg.torus_fused_pull_q, kv_block=cfg.attn_kv_block,
             backend=cfg.comm_backend, interpret=cfg.kernel_interpret,
+            wire_dtype=cfg.a2a_wire_dtype,
         )
     else:
         body = partial(
             _usp_like, layout=layout, scale=scale, causal=causal,
             window=window, unroll=cfg.unroll_ring, kv_block=cfg.attn_kv_block,
             backend=cfg.comm_backend, interpret=cfg.kernel_interpret,
+            wire_dtype=cfg.a2a_wire_dtype,
         )
 
     fn = shard_map(

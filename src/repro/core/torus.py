@@ -90,9 +90,14 @@ def torus_attention(
     kv_block: int | None = None,
     backend: str = "xla",
     interpret: bool = True,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """Full SwiftFusion attention with the Torus schedule; returns O in the
     original [B, Ls, Hq, D] sharding.
+
+    ``wire_dtype`` compresses the inter-machine leg of the Push-O when the
+    layout is hierarchical (``layout.u_groups > 1``, DESIGN.md §8.2); the
+    Pull legs stay exact (Q/KV feed compute directly).
 
     ``backend="pallas"`` lowers every transfer through the Pallas channel
     backend (semaphore-tracked puts, DESIGN.md §8.1) and runs each
@@ -194,4 +199,5 @@ def torus_attention(
 
     # ---- Push-O: staged inverse all-to-all; diagonal O never moves
     o = finalize(acc, dtype=q.dtype)  # [B, P_u * Ls, h, D]
-    return scatter_o(o, layout, backend=backend, interpret=interpret)
+    return scatter_o(o, layout, backend=backend, interpret=interpret,
+                     wire_dtype=wire_dtype)

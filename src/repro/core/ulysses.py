@@ -44,13 +44,17 @@ def group_positions(layout: GroupLayout, shard_len: int, ring_r) -> jax.Array:
 def gather_qkv(
     q: jax.Array, k: jax.Array, v: jax.Array, layout: GroupLayout,
     *, backend: str = "xla", interpret: bool = True,
+    wire_dtype: str | None = None,
 ) -> Gathered:
-    """The first three all-to-alls of Ulysses Attention."""
+    """The first three all-to-alls of Ulysses Attention.  ``wire_dtype``
+    compresses the inter-machine leg when the layout is hierarchical
+    (``layout.u_groups > 1``, DESIGN.md §8.2); ignored otherwise."""
     shard_len = q.shape[SEQ_AXIS]
 
     def fwd(x):
         stacked = monolithic_all_to_all(x, layout, split_axis=HEAD_AXIS,
-                                        backend=backend, interpret=interpret)
+                                        backend=backend, interpret=interpret,
+                                        wire_dtype=wire_dtype)
         # [P_u, B, Ls, h, D] -> [B, P_u * Ls, h, D], source-u order
         p_u, b, ls, h, d = stacked.shape
         return jnp.moveaxis(stacked, 0, 1).reshape(b, p_u * ls, h, d)
@@ -62,11 +66,13 @@ def gather_qkv(
 
 
 def scatter_o(o: jax.Array, layout: GroupLayout, *, backend: str = "xla",
-              interpret: bool = True) -> jax.Array:
+              interpret: bool = True,
+              wire_dtype: str | None = None) -> jax.Array:
     """The fourth all-to-all: restore O from [B, P_u*Ls, H/P_u, D] to the
     original [B, Ls, H, D] sequence sharding."""
     p_u = layout.p_ulysses
     b, lg, h, d = o.shape
     stacked = o.reshape(b, p_u, lg // p_u, h, d).transpose(1, 0, 2, 3, 4)
     return ungroup_all_to_all(stacked, layout, concat_axis=HEAD_AXIS,
-                              backend=backend, interpret=interpret)
+                              backend=backend, interpret=interpret,
+                              wire_dtype=wire_dtype)

@@ -118,6 +118,55 @@ def main() -> int:
         return 1
     reports.append(comm.validate(tr, lowered.compile().as_text(), hmesh))
 
+    # --- 2b. hierarchical two-level a2a (DESIGN.md §8.2): ulysses over
+    # both boundaries with u_groups = N — the fast leg must stay inside
+    # the machine, the slow leg's hops must declare-and-admit overlap ----
+    hier_cfg = SPConfig(strategy="ulysses", sp_axes=("pod", "model"),
+                        batch_axes=("data",), hier_a2a=True)
+    hq = jax.random.normal(kq, (2, 32, 4, 16))  # 4 heads => P_u = 4, N = 2
+    hk = jax.random.normal(kk, (2, 32, 4, 16))
+    hv = jax.random.normal(kv, (2, 32, 4, 16))
+    with comm.record("hier_a2a") as tr:
+        lowered = jax.jit(
+            lambda q, k, v: sp_attention(q, k, v, mesh=mesh, cfg=hier_cfg)
+        ).lower(hq, hk, hv)
+    hier_events = [e for e in tr.events if e.stream.startswith("hier")]
+    labels = {e.channel.rsplit(".", 1)[-1] for e in hier_events}
+    if not {"intra1", "inter1"} <= labels:
+        print("commcheck FAIL: hierarchical a2a recorded no intra+inter "
+              f"legs (channels: {sorted(labels)})")
+        return 1
+    m_fast = mesh.shape["model"]
+    for e in hier_events:
+        if "intra" in e.channel and any(s // m_fast != d // m_fast
+                                        for s, d in e.perm):
+            print(f"commcheck FAIL: fast leg {e.channel} crosses the "
+                  f"machine boundary: {e.perm}")
+            return 1
+    if not all(e.overlaps for e in hier_events if "inter" in e.channel):
+        print("commcheck FAIL: a hier inter hop declares no overlap")
+        return 1
+    reports.append(comm.validate(tr, lowered.compile().as_text(), mesh))
+
+    # same program through the Pallas channel backend (interpret mode):
+    # routes still present in HLO, semaphore protocol clean
+    hier_pl = dataclasses.replace(hier_cfg, comm_backend="pallas",
+                                  kernel_interpret=True)
+    with comm.record("hier_a2a_pallas") as tr:
+        lowered = jax.jit(
+            lambda q, k, v: sp_attention(q, k, v, mesh=mesh, cfg=hier_pl)
+        ).lower(hq, hk, hv)
+    if not any(e.backend == "pallas" and e.stream.startswith("hier")
+               for e in tr.events):
+        print("commcheck FAIL: no pallas-backend hier puts recorded")
+        return 1
+    reports.append(comm.validate(tr, lowered.compile().as_text(), mesh,
+                                 require_overlap=False))
+    hier_sem = comm.validate_semaphores(tr)
+    if not hier_sem.ok:
+        print(hier_sem.summary())
+        return 1
+
     # --- 3. Pallas backend (DESIGN.md §8.1): same swift_torus program,
     # semaphore-tracked channels + fused ring kernel, interpret mode -----
     psp = dataclasses.replace(sp, comm_backend="pallas", kernel_interpret=True)

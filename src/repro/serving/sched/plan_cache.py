@@ -44,6 +44,7 @@ class PlanCache:
                  base_patches: int = 0,
                  patch_multipliers: tuple[int, ...] = (1, 2, 4),
                  comm_backend: str = "xla",
+                 a2a_wire_dtype: str | None = None,
                  tracker: Tracker | None = None):
         """``candidates`` fixes the plan set (the engine passes the single
         plan its mesh can execute; the benchmark passes None to enumerate
@@ -52,7 +53,13 @@ class PlanCache:
         displaced pipelining).  ``comm_backend`` is the channel lowering
         the engine will execute with ("pallas" = kernel-fused, DESIGN.md
         §8.1); candidate plans are scored under it, so the fused path's
-        lower per-step issue cost is what the selection sees.
+        lower per-step issue cost is what the selection sees.  When the
+        enumeration runs here (``candidates is None``) it includes the
+        hierarchical-a2a variants of every qualifying multi-machine
+        factorisation (DESIGN.md §8.2), scored per leg, so the cache
+        chooses flat vs hierarchical per bucket shape;
+        ``a2a_wire_dtype`` additionally opts the enumeration into the
+        fp8-wire variants.
         ``tracker`` is the metrics sink hit/miss/invalidation counters are
         published to (DESIGN.md §11); None = a private aggregate-only
         ``Tracker`` so the counter attributes keep working standalone."""
@@ -72,7 +79,8 @@ class PlanCache:
             candidates = candidate_hybrid_plans(
                 n_machines, m_per_machine, heads, kv_heads, n_layers=n_layers,
                 cfg_degree=max(guidance_branches, 2),
-                comm_backend=comm_backend)
+                comm_backend=comm_backend,
+                a2a_wire_dtype=a2a_wire_dtype)
         self.candidates = list(candidates)
         assert self.candidates, "plan cache needs at least one candidate"
         self.plans: dict[tuple[int, int], PlanChoice] = {}

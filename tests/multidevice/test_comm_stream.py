@@ -285,3 +285,225 @@ def test_staged_ungroup_validates_under_pallas(mesh8, rng):
     assert sem.ok, sem.summary()
     np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-level a2a (DESIGN.md §8.2)
+# ---------------------------------------------------------------------------
+
+def _hier_layout(p_u=4, p_r=1):
+    """mesh8's SP group is (pod=2, model=2): N=2 machines, so the only
+    hier-applicable factorisation is P_u=4 (m_u=2 members per machine)."""
+    return GroupLayout(SP_AXES, p_u, p_r, ulysses_outer=True, u_groups=2)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_hier_a2a_bit_compatible_with_monolithic(backend, mesh8, rng):
+    """Acceptance gate: on the 8-device CPU mesh the hierarchical a2a is
+    bit-compatible (<= 1e-5 fp32; exact, being pure routing) with the
+    monolithic collective under both channel backends."""
+    hier, flat = _hier_layout(), _layout(4, 1)
+    x = jax.random.normal(rng, (2, 32, 8, 4)).astype(jnp.float32)
+    spec = P(None, SP_AXES, None, None)
+    out_spec = P(None, None, SP_AXES, None, None)
+
+    def hier_fn(xs):
+        # dispatch happens inside monolithic_all_to_all on u_groups > 1
+        return monolithic_all_to_all(xs, hier, split_axis=2,
+                                     backend=backend, interpret=True)
+
+    def flat_fn(xs):
+        return monolithic_all_to_all(xs, flat, split_axis=2)
+
+    f_h = shard_map(hier_fn, mesh=mesh8, in_specs=(spec,),
+                    out_specs=out_spec, check_vma=False)
+    f_f = shard_map(flat_fn, mesh=mesh8, in_specs=(spec,),
+                    out_specs=out_spec, check_vma=False)
+    np.testing.assert_allclose(np.asarray(jax.jit(f_h)(x)),
+                               np.asarray(jax.jit(f_f)(x)),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_hier_roundtrip_and_ungroup(backend, mesh8, rng):
+    layout = _hier_layout()
+    x = jax.random.normal(rng, (2, 32, 8, 4))
+    spec = P(None, SP_AXES, None, None)
+
+    def roundtrip(xs):
+        stacked = monolithic_all_to_all(xs, layout, split_axis=2,
+                                        backend=backend, interpret=True)
+        return ungroup_all_to_all(stacked, layout, concat_axis=2,
+                                  backend=backend, interpret=True)
+
+    f = _smap(roundtrip, mesh8, spec)
+    np.testing.assert_allclose(np.asarray(jax.jit(f)(x)), np.asarray(x),
+                               rtol=0, atol=0)
+
+
+def test_hier_a2a_fp8_wire_close_to_exact(mesh8, rng):
+    """With fp8 on the inter-machine leg only, the result stays within
+    e4m3 mantissa error of the exact exchange (intra leg untouched)."""
+    pytest.importorskip("jax.numpy", reason="float8 availability")
+    from repro.comm.compress import has_wire_dtype
+    if not has_wire_dtype("float8_e4m3fn"):
+        pytest.skip("jax build lacks float8")
+    layout = _hier_layout()
+    x = jax.random.normal(rng, (2, 32, 8, 4)).astype(jnp.float32)
+    spec = P(None, SP_AXES, None, None)
+    out_spec = P(None, None, SP_AXES, None, None)
+
+    def fp8(xs):
+        return monolithic_all_to_all(xs, layout, split_axis=2,
+                                     wire_dtype="float8_e4m3fn")
+
+    def exact(xs):
+        return monolithic_all_to_all(xs, layout, split_axis=2)
+
+    f8 = shard_map(fp8, mesh=mesh8, in_specs=(spec,), out_specs=out_spec,
+                   check_vma=False)
+    fx = shard_map(exact, mesh=mesh8, in_specs=(spec,), out_specs=out_spec,
+                   check_vma=False)
+    got, ref = np.asarray(jax.jit(f8)(x)), np.asarray(jax.jit(fx)(x))
+    assert not np.array_equal(got, ref), "fp8 wire did not engage"
+    np.testing.assert_allclose(got, ref, rtol=0.08, atol=0.08)
+
+
+def test_hier_a2a_trace_declares_and_validates_inter_overlap(mesh8, rng):
+    """The acceptance trace gate: both legs' hops appear as channel events
+    with the intended routes; the inter hops carry an overlap declaration
+    that validate() admits against the compiled HLO.  Two tensors go
+    through the transform (as Q/K/V do in gather_qkv) — the exchanges are
+    mutually independent, which is the compute the declaration names (a
+    SINGLE standalone g=2 exchange has no peer and cannot overlap)."""
+    layout = _hier_layout()
+    kx, ky = jax.random.split(rng)
+    x = jax.random.normal(kx, (2, 32, 8, 4))
+    y = jax.random.normal(ky, (2, 32, 8, 4))
+    spec = P(None, SP_AXES, None, None)
+    out_spec = P(None, None, SP_AXES, None, None)
+
+    def fn(xs, ys):
+        return (monolithic_all_to_all(xs, layout, split_axis=2),
+                monolithic_all_to_all(ys, layout, split_axis=2))
+
+    f = shard_map(fn, mesh=mesh8, in_specs=(spec, spec),
+                  out_specs=(out_spec, out_spec), check_vma=False)
+    with comm.record("hier") as tr:
+        lowered = jax.jit(f).lower(x, y)
+    chans = [e.channel for e in tr.events]
+    # per tensor: m_u - 1 = 1 fast-leg stage, g - 1 = 1 slow-leg stage
+    assert chans == ["hier.a2a.intra1", "hier.a2a.inter1"] * 2, chans
+    intra_e, inter_e = tr.events[:2]
+    assert intra_e.perm == tuple(layout.ulysses_intra_stage_perm(1))
+    assert inter_e.perm == tuple(layout.ulysses_inter_stage_perm(1))
+    # the fast leg never crosses the machine boundary
+    pod = mesh8.shape["model"]
+    for s, d in intra_e.perm:
+        assert s // pod == d // pod, intra_e.perm
+    assert any(s // pod != d // pod for s, d in inter_e.perm)
+    for e in tr.events:
+        if e.channel.endswith("inter1"):
+            assert e.overlaps, "inter hop must declare its overlap intent"
+    report = comm.validate(tr, lowered.compile().as_text(), mesh8)
+    assert report.ok, report.summary()
+    assert any(ch.startswith("hier.a2a.inter") for ch in report.overlapped), (
+        report.overlapped)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_hier_a2a_profiler_measures_inter_hops(backend, mesh8, rng):
+    """PR-7 profiler agreement: the executed schedule records the inter
+    hops as comm legs whose issue->signal windows exist and whose intent
+    tag matches the trace declaration."""
+    layout = _hier_layout()
+    x = jax.random.normal(rng, (2, 32, 8, 4))
+    spec = P(None, SP_AXES, None, None)
+    out_spec = P(None, None, SP_AXES, None, None)
+
+    def fn(xs):
+        return monolithic_all_to_all(xs, layout, split_axis=2,
+                                     backend=backend, interpret=True)
+
+    f = shard_map(fn, mesh=mesh8, in_specs=(spec,), out_specs=out_spec,
+                  check_vma=False)
+    prof = comm.CommProfiler()
+    with comm.profile(prof):
+        out = jax.jit(f)(x)
+    jax.block_until_ready(out)
+    evs = prof.take()
+    inter = [e for e in evs if e.meta.channel.startswith("hier.a2a.inter")]
+    assert inter, [e.meta.channel for e in evs]
+    assert {e.phase for e in inter} >= {"issue", "signal"}
+    assert all(e.meta.intent for e in inter
+               if e.meta.kind == "comm"), "inter legs lost their intent tag"
+
+
+def test_hier_attention_matches_flat_end_to_end(mesh8, rng):
+    """sp_attention with hier_a2a on vs off: identical O (<= 1e-5 fp32)
+    — the full four-transform path through gather_qkv/scatter_o."""
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (2, 32, 4, 16))
+    k = jax.random.normal(kk, (2, 32, 4, 16))
+    v = jax.random.normal(kv, (2, 32, 4, 16))
+    base = SPConfig(strategy="ulysses", sp_axes=SP_AXES,
+                    batch_axes=("data",))
+    hier = dataclasses.replace(base, hier_a2a=True)
+
+    def run(cfg):
+        return jax.jit(lambda *a: sp_attention(
+            *a, mesh=mesh8, cfg=cfg))(q, k, v)
+
+    np.testing.assert_allclose(np.asarray(run(hier)), np.asarray(run(base)),
+                               rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# staged a2a <-> ungroup round-trip property (uneven heads, dtypes, layouts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("outer", [True, False])
+@pytest.mark.parametrize("p_u", [1, 2, 4])
+def test_staged_roundtrip_property(p_u, outer, dtype, mesh8, rng):
+    """staged_all_to_all ∘ staged_ungroup == identity for uneven head
+    chunks (12 heads -> chunks of 3), both element dtypes (pure routing:
+    exact even in bf16), every P_u, and both ulysses_outer layouts."""
+    layout = GroupLayout(SP_AXES, p_u, 4 // p_u, ulysses_outer=outer)
+    x = jax.random.normal(rng, (1, 32, 12, 2)).astype(dtype)
+    spec = P(None, SP_AXES, None, None)
+
+    def roundtrip(xs):
+        stacked = comm.staged_all_to_all(xs, layout, split_axis=2)
+        return comm.staged_ungroup(stacked, layout, concat_axis=2)
+
+    f = _smap(roundtrip, mesh8, spec)
+    np.testing.assert_array_equal(np.asarray(jax.jit(f)(x)), np.asarray(x))
+
+
+@pytest.mark.parametrize("outer", [True, False])
+@pytest.mark.parametrize("p_u", [2, 4])
+def test_staged_chunk_order_matches_group_positions(p_u, outer, mesh8):
+    """The stacked output's source-u ordering IS group_positions': encode
+    each element's global sequence position into the input and check
+    stacked[j] carries exactly the positions group_positions assigns to
+    source j."""
+    from repro.core.ulysses import group_positions
+
+    layout = GroupLayout(SP_AXES, p_u, 4 // p_u, ulysses_outer=outer)
+    ls = 8  # 32 global / 4 SP devices
+    x = jnp.broadcast_to(jnp.arange(32, dtype=jnp.float32)[None, :, None,
+                                                           None],
+                         (1, 32, p_u, 1))
+    spec = P(None, SP_AXES, None, None)
+
+    def check(xs):
+        stacked = comm.staged_all_to_all(xs, layout, split_axis=2)
+        _, r = layout.my_coords()
+        want = group_positions(layout, ls, r).reshape(p_u, ls)
+        got = stacked[:, 0, :, 0, 0]  # [P_u, Ls] of encoded positions
+        return jnp.max(jnp.abs(got - want)).reshape(1)
+
+    f = shard_map(check, mesh=mesh8, in_specs=(spec,),
+                  out_specs=P(SP_AXES), check_vma=False)
+    assert np.asarray(jax.jit(f)(x)).max() == 0.0

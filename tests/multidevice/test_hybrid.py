@@ -17,6 +17,11 @@ from repro.serving import DiTRequest, DiTServer, SamplerConfig, sample
 
 SEQ = 64
 
+# heavy e2e: every test in here pays a 5-16s distributed sampling run on
+# the hybrid mesh — runs in the dedicated CI 'slow' job, not the default
+# tier-1 pass (RUN_SLOW_TESTS=1 to run locally)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

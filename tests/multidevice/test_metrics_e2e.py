@@ -38,6 +38,11 @@ from repro.serving import (
 
 URGENT_SLA = 1.0  # see tests/multidevice/test_preempt_e2e.py
 
+# heavy e2e: the module-scoped served fixture runs a full preempting
+# serve behind multi-second jit traces — runs in the dedicated CI 'slow'
+# job, not the default tier-1 pass (RUN_SLOW_TESTS=1 to run locally)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def served(tmp_path_factory):

@@ -60,6 +60,7 @@ def test_distributed_loss_matches_single(arch, strategy, mesh8, rng):
     assert abs(float(loss_d) - loss_1) < tol, (arch, float(loss_d), loss_1)
 
 
+@pytest.mark.slow  # ~13s: MoE dispatch jit dominates (CI 'slow' job)
 def test_moe_a2a_matches_single(mesh8, rng):
     """Expert-parallel all-to-all dispatch on 2 EP ranks == 1-device path
     (generous capacity so no drops)."""
@@ -81,6 +82,7 @@ def test_moe_a2a_matches_single(mesh8, rng):
     assert abs(float(loss_d) - loss_1) < 2e-3, (float(loss_d), loss_1)
 
 
+@pytest.mark.slow  # ~15s: two grad jits (CI 'slow' job)
 def test_gradients_match_single_device(mesh8, rng):
     """Train-step gradient parity: distributed == single replica."""
     cfg = _cfg("qwen2-1.5b")

@@ -25,6 +25,11 @@ from repro.serving import (
     SchedConfig,
 )
 
+# heavy e2e: two module-scoped server fixtures (preempted + rerun) each
+# pay multi-second jit traces — runs in the dedicated CI 'slow' job, not
+# the default tier-1 pass (RUN_SLOW_TESTS=1 to run locally)
+pytestmark = pytest.mark.slow
+
 # the injected request's SLA: comfortably below the remaining measured
 # run time of the 256 batch (whose first step pays a multi-second jit
 # trace on this mesh) and comfortably above its own predicted batch

@@ -19,6 +19,11 @@ from repro.serving import (
     SchedConfig,
 )
 
+# heavy e2e: the module-scoped server fixture pays multi-second jit
+# traces per bucket shape — runs in the dedicated CI 'slow' job, not the
+# default tier-1 pass (RUN_SLOW_TESTS=1 to run locally)
+pytestmark = pytest.mark.slow
+
 LENS = [256, 512, 1024, 256, 512, 256, 256]  # 4x256 + 2x512 + 1x1024
 SLAS = {256: 30.0, 512: 60.0, 1024: 120.0}
 

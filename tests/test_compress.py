@@ -1,0 +1,78 @@
+"""fp8 wire codec (comm/compress.py): roundtrip accuracy + error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.compress import (
+    WIRE_DTYPES,
+    dequantize,
+    ef_encode,
+    has_wire_dtype,
+    quantize,
+    zero_feedback,
+)
+
+pytestmark = pytest.mark.skipif(
+    not has_wire_dtype("float8_e4m3fn"),
+    reason="jax build lacks float8 dtypes")
+
+
+@pytest.mark.parametrize("wire", WIRE_DTYPES)
+def test_quantize_roundtrip_relative_error_bounded(wire):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
+    w, scale = quantize(x, wire)
+    assert w.dtype == getattr(jnp, wire)
+    y = dequantize(w, scale, jnp.float32)
+    # e4m3 has a 3-bit mantissa (~6% step), e5m2 2 bits (~12%)
+    tol = 0.08 if wire == "float8_e4m3fn" else 0.15
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert err.max() <= tol * np.abs(np.asarray(x)).max()
+
+
+def test_quantize_scale_tracks_absmax():
+    x = jnp.array([[1e-3, -2e-3], [5e-4, 1.5e-3]], jnp.float32)
+    _, scale = quantize(x, "float8_e4m3fn")
+    # absmax maps to the format's max representable: scale = absmax / fmax
+    fmax = float(jnp.finfo(jnp.float8_e4m3fn).max)
+    assert np.isclose(float(scale), 2e-3 / fmax, rtol=1e-6)
+
+
+def test_unknown_wire_dtype_raises():
+    with pytest.raises(ValueError):
+        quantize(jnp.zeros((2,)), "int4")
+
+
+def test_error_feedback_reduces_accumulated_drift():
+    """Repeatedly quantising a running sum WITH error feedback keeps the
+    accumulated error near one quantisation step; without it the bias
+    compounds linearly (the §8.2 justification for threading err through
+    the inter-machine stages)."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (256,), jnp.float32)
+
+    def run(steps, with_ef):
+        acc = jnp.zeros_like(x)
+        err = zero_feedback(x)
+        for _ in range(steps):
+            if with_ef:
+                w, s, err = ef_encode(x, err, "float8_e4m3fn")
+            else:
+                w, s = quantize(x, "float8_e4m3fn")
+            acc = acc + dequantize(w, s, jnp.float32)
+        return acc
+
+    steps = 50
+    target = np.asarray(x) * steps
+    drift_ef = np.abs(np.asarray(run(steps, True)) - target).max()
+    drift_raw = np.abs(np.asarray(run(steps, False)) - target).max()
+    assert drift_ef < drift_raw / 5
+    assert drift_ef < 0.5  # stays O(one step), not O(steps)
+
+
+def test_ef_encode_error_state_is_residual():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32,), jnp.float32)
+    err0 = zero_feedback(x)
+    w, s, err1 = ef_encode(x, err0, "float8_e4m3fn")
+    resid = np.asarray(x) - np.asarray(dequantize(w, s, jnp.float32))
+    np.testing.assert_allclose(np.asarray(err1), resid, rtol=1e-6, atol=1e-7)

@@ -61,3 +61,71 @@ def test_assigned_arch_head_counts():
         p = plan(2, 16, hq, hkv)
         assert p.p_ulysses * p.p_ring == 32, arch
         assert math.gcd(hq, hkv) % p.p_ulysses == 0, arch
+
+
+# ---------------------------------------------------------------------------
+# hierarchical a2a candidates (DESIGN.md §8.2)
+# ---------------------------------------------------------------------------
+
+def test_candidates_include_hier_variants_when_applicable():
+    from repro.core.comm_model import hierarchical_applicable
+    from repro.core.planner import candidate_hybrid_plans
+
+    cands = candidate_hybrid_plans(2, 8, 32, n_layers=24)
+    flat = [h for h in cands if not h.hier_a2a]
+    hier = [h for h in cands if h.hier_a2a]
+    assert hier, "no hierarchical candidate on a 2-machine mesh"
+    for h in hier:
+        assert hierarchical_applicable(h.sp), h
+        # a flat twin of the same factorisation is always also offered
+        assert any((f.cfg, f.pp, f.sp) == (h.cfg, h.pp, h.sp)
+                   for f in flat), h
+    # single machine: hierarchy never applies, no variant emitted
+    assert not any(h.hier_a2a for h in candidate_hybrid_plans(1, 8, 32))
+
+
+def test_candidates_fp8_variant_requires_opt_in():
+    from repro.core.planner import candidate_hybrid_plans
+
+    plain = candidate_hybrid_plans(2, 8, 32)
+    assert not any(h.a2a_wire_dtype for h in plain)
+    fp8 = candidate_hybrid_plans(2, 8, 32, a2a_wire_dtype="float8_e4m3fn")
+    wired = [h for h in fp8 if h.a2a_wire_dtype]
+    assert wired and all(h.hier_a2a for h in wired)
+
+
+def test_plan_hybrid_drops_hier_when_topology_disqualifies():
+    from repro.core.planner import plan_hybrid
+
+    # cfg=2 consumes the second machine: the SP sub-mesh is single-machine
+    h = plan_hybrid(2, 8, 32, cfg_parallel=True, hier_a2a=True,
+                    a2a_wire_dtype="float8_e4m3fn")
+    assert h.cfg == 2 and h.sp.n_machines == 1
+    assert not h.hier_a2a and h.a2a_wire_dtype is None
+    # without cfg the 2-machine sub-mesh qualifies (P_u=16 > N=2)
+    h2 = plan_hybrid(2, 8, 32, hier_a2a=True)
+    assert h2.hier_a2a
+
+
+def test_plan_for_shape_scores_hier_vs_flat():
+    """Long sequences on a multi-machine mesh: the message-count savings
+    make a hierarchical candidate win at least one bucket."""
+    from repro.core.planner import plan_for_shape
+
+    best, pred = plan_for_shape(
+        2, 8, 32, seq=48_000, head_dim=64, n_layers=24)
+    assert pred["t_step"] > 0
+    # the hier variant of the winning factorisation never scores WORSE
+    # than its flat twin (identical volumes, fewer paced inter messages)
+    from repro.core.comm_model import (LayerWorkload, plan_step_latency)
+    import dataclasses as _dc
+    from repro.core.planner import candidate_hybrid_plans
+
+    wl = LayerWorkload(batch=1, seq=48_000, heads=32, head_dim=64)
+    for h in candidate_hybrid_plans(2, 8, 32, n_layers=24):
+        if not h.hier_a2a:
+            continue
+        flat = _dc.replace(h, hier_a2a=False)
+        s_h = plan_step_latency(h, wl, n_layers=24)["t_step"]
+        s_f = plan_step_latency(flat, wl, n_layers=24)["t_step"]
+        assert s_h <= s_f * (1 + 1e-9), (h, s_h, s_f)

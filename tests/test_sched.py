@@ -233,6 +233,21 @@ def test_fixed_candidate_cache_keeps_engine_plan():
         assert pc.select(2, seq).hplan is fixed
 
 
+def test_plan_cache_enumeration_scores_hier_variants():
+    """The cache's own enumeration must include the hierarchical-a2a
+    twins of qualifying multi-machine factorisations (DESIGN.md §8.2),
+    per-leg scored, with fp8 variants only on opt-in."""
+    pc = make_cache(n_machines=2, m_per_machine=8, heads=16)
+    assert any(h.hier_a2a for h in pc.candidates)
+    assert not any(h.a2a_wire_dtype for h in pc.candidates)
+    choice = pc.select(1, 256)
+    assert "t_a2a_inter_step" in choice.pred  # per-leg, not single-blob
+    assert "t_a2a" not in choice.pred
+    fp8 = make_cache(n_machines=2, m_per_machine=8, heads=16,
+                     a2a_wire_dtype="float8_e4m3fn")
+    assert any(h.a2a_wire_dtype == "float8_e4m3fn" for h in fp8.candidates)
+
+
 # ---------------------------------------------------------------------------
 # planner per-shape entry + comm-model scoring API
 # ---------------------------------------------------------------------------
